@@ -1,0 +1,60 @@
+"""§Roofline: render the dry-run artifacts into the per-cell table.
+
+Reads ``artifacts/dryrun/*.json`` produced by ``repro.launch.dryrun`` and
+prints (and returns) the roofline rows: three terms in seconds, the dominant
+bottleneck, MODEL_FLOPS ratio, and the roofline fraction.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load(flavor: str = "tp", mesh: str = "pod1") -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        base = os.path.basename(path)[: -len(".json")]
+        parts = base.split("__")
+        if len(parts) != 4:
+            continue  # hillclimb-tagged artifacts (…__hcN) are §Perf-only
+        if parts[2] != mesh or parts[3] != flavor:
+            continue
+        with open(path) as f:
+            art = json.load(f)
+        cells.append(art)
+    return cells
+
+
+def fmt_row(art: dict) -> str:
+    cid = f"{art['arch']}__{art['shape']}"
+    if art.get("skipped"):
+        return f"{cid:44s} SKIP ({art['reason'][:48]}...)"
+    r = art["roofline"]
+    return (
+        f"{cid:44s} c={r['compute_s']:.3e}s m={r['memory_s']:.3e}s "
+        f"x={r['collective_s']:.3e}s dom={r['dominant']:10s} "
+        f"useful={r['useful_flops_ratio']:.2f} frac={r['roofline_fraction']:.3f}"
+    )
+
+
+def main() -> list[str]:
+    rows = []
+    for flavor, mesh in (("tp", "pod1"), ("dp", "pod1"), ("tp", "pod2")):
+        cells = load(flavor, mesh)
+        if not cells:
+            continue
+        rows.append(f"# roofline {flavor} {mesh} ({len(cells)} cells)")
+        for art in cells:
+            rows.append("roofline," + fmt_row(art).replace(",", ";"))
+    if not rows:
+        rows.append("roofline,0.0,no dry-run artifacts found (run "
+                    "python -m repro.launch.dryrun --all first)")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

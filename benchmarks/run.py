@@ -1,0 +1,64 @@
+"""Benchmark harness — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+
+* fig10_*   — chunk-size sensitivity (paper Fig. 10, simulator on the
+  paper's P100 model)
+* fig12_*   — throughput vs problem size incl. host-memory spilling
+  (paper Figs. 11–12)
+* fig15_*   — weak scaling to 32 devices (paper Figs. 13–15)
+* fig16_*   — CGC co-clustering application + framework overhead
+  (paper Fig. 16)
+* kernel_*  — Pallas kernel microbenchmarks (interpret mode on CPU)
+* roofline  — §Roofline rows from the dry-run artifacts (if present)
+
+Usage: ``PYTHONPATH=src python -m benchmarks.run [--skip-roofline]``
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    sections = []
+    from . import (
+        bench_kernels,
+        paper_fig10_chunksize,
+        paper_fig12_throughput,
+        paper_fig15_scaling,
+        paper_fig16_cocluster,
+        roofline_table,
+    )
+
+    sections = [
+        ("fig10 chunk-size sensitivity", paper_fig10_chunksize.main),
+        ("fig12 throughput + spilling", paper_fig12_throughput.main),
+        ("fig15 weak scaling", paper_fig15_scaling.main),
+        ("fig16 co-clustering app", paper_fig16_cocluster.main),
+        ("kernel microbenchmarks", bench_kernels.main),
+    ]
+    if "--skip-roofline" not in sys.argv:
+        sections.append(("roofline (dry-run artifacts)", roofline_table.main))
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for title, fn in sections:
+        print(f"# --- {title} ---")
+        t0 = time.time()
+        try:
+            for line in fn():
+                print(line)
+        except Exception as e:
+            failures += 1
+            print(f"BENCH-FAIL {title}: {e!r}")
+            traceback.print_exc()
+        print(f"# ({title}: {time.time() - t0:.1f}s)")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Batched LM serving with continuous batching (deliverable b, serving).
+
+Spins up the ServeEngine on a smoke-scale model, submits a wave of requests
+with mixed lengths, and reports throughput + per-request outputs.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py [--arch gemma-2b]
+"""
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, get_smoke_config
+from repro.models import init_params
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b", choices=ARCHS)
+    ap.add_argument("--requests", type=int, default=10)
+    ap.add_argument("--slots", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    params = init_params(jax.random.key(0), cfg)
+    engine = ServeEngine(params, cfg, slots=args.slots, max_len=128)
+    rng = np.random.default_rng(0)
+
+    t0 = time.perf_counter()
+    for rid in range(args.requests):
+        plen = int(rng.integers(8, 32))
+        engine.submit(Request(
+            rid=rid,
+            prompt=rng.integers(0, cfg.vocab, plen).astype(np.int32),
+            max_new_tokens=int(rng.integers(4, 16)),
+            temperature=0.0 if rid % 2 == 0 else 0.8,
+        ))
+    done = engine.run()
+    dt = time.perf_counter() - t0
+
+    for r in sorted(done, key=lambda r: r.rid):
+        print(f"req {r.rid}: prompt_len={len(r.prompt)} "
+              f"generated={len(r.output)} tokens={r.output[:8]}...")
+    total = engine.stats["decode_tokens"] + engine.stats["prefill_tokens"]
+    print(f"\n{len(done)}/{args.requests} requests in {dt:.2f}s "
+          f"({total / dt:.1f} tok/s incl. prefill; "
+          f"{engine.stats['decode_tokens'] / dt:.1f} decode tok/s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""End-to-end LM training driver (deliverable b: the ~100M-param run).
+
+Trains a gemma-family model on the synthetic token stream with the full
+substrate: data pipeline, AdamW + cosine schedule, checkpointing, fault
+supervision.  Default is a CPU-sized quick run; ``--full`` selects a ~100M
+parameter model for a few hundred steps (hours on CPU, minutes on a real
+device), as the assignment prescribes.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--full] [--steps N]
+"""
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_smoke_config
+from repro.launch.train import run_training
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="~100M params, few hundred steps")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default="/tmp/lightning_lm_ckpt")
+    args = ap.parse_args()
+
+    if args.full:
+        # ~100M params: 12L × d768 × ff3072, 32k vocab.
+        import repro.configs.gemma_2b as g
+
+        cfg = g.config().scaled(
+            name="gemma-100m", n_layers=12, d_model=768, n_heads=12,
+            n_kv_heads=4, head_dim=64, d_ff=3072, vocab=32_768,
+            dtype="float32", remat=False,
+        )
+        import repro.configs as configs
+
+        # monkeypatch-free path: train via the driver's smoke hook
+        from repro.launch import train as train_mod
+        import repro.configs as cmod
+
+        orig = cmod.get_smoke_config
+        cmod.get_smoke_config = lambda name: cfg
+        try:
+            result = run_training(
+                "gemma-2b", smoke=True,
+                steps=args.steps or 300, batch=8, seq=512,
+                ckpt_dir=args.ckpt_dir, ckpt_every=50, log_every=10,
+            )
+        finally:
+            cmod.get_smoke_config = orig
+    else:
+        result = run_training(
+            "gemma-2b", smoke=True,
+            steps=args.steps or 100, batch=8, seq=128,
+            ckpt_dir=args.ckpt_dir, ckpt_every=25, log_every=10,
+        )
+
+    print(f"\narch={result['arch']}  steps={result['steps']}")
+    print(f"loss: {result['first_loss']:.4f} → {result['last_loss']:.4f}")
+    assert result["last_loss"] < result["first_loss"], "training must learn"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Checkpointing: async atomic save, retention, restore, elastic reshard."""
+
+from .checkpoint import CheckpointManager, restore_resharded
+
+__all__ = ["CheckpointManager", "restore_resharded"]

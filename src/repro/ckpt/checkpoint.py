@@ -1,0 +1,188 @@
+"""Checkpoint manager: async, atomic, retained, mesh-elastic.
+
+Design points for 1000+-node runs:
+
+* **Atomic**: write to ``step_N.tmp/`` then ``os.rename`` — a crash mid-save
+  never corrupts the latest checkpoint (restore scans for complete dirs).
+* **Async**: ``save()`` snapshots device arrays to host (cheap) and hands
+  serialization to a background thread so the train loop isn't blocked by
+  disk bandwidth (the Lightning overlap principle applied to state I/O).
+* **Logical layout**: arrays are saved per-leaf as ``.npy`` keyed by tree
+  path, with a JSON manifest carrying step/config metadata.  Nothing about
+  the mesh is baked in, so a checkpoint written on a (2,16,16) mesh restores
+  onto any other mesh — **elastic scaling**: ``restore_resharded`` device_puts
+  each leaf with the *target* mesh's NamedSharding.
+* **Retention**: keep the last ``keep`` checkpoints, delete older ones.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree: Any) -> list[tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(_path_str(p) for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"[{p.idx}]"
+    return str(p)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+        self._error: Exception | None = None
+
+    # -- save -------------------------------------------------------------------
+
+    def save(self, step: int, state: Any, metadata: dict | None = None,
+             blocking: bool = False) -> None:
+        """Snapshot to host memory now; serialize in the background."""
+        self.wait()  # one in-flight save at a time
+        host_leaves = [
+            (k, np.asarray(jax.device_get(v)))
+            for k, v in _flatten_with_paths(state)
+        ]
+        meta = dict(metadata or {})
+        meta["step"] = int(step)
+
+        def work():
+            try:
+                tmp = os.path.join(self.directory, f"step_{step:08d}.tmp")
+                final = os.path.join(self.directory, f"step_{step:08d}")
+                os.makedirs(tmp, exist_ok=True)
+                for key, arr in host_leaves:
+                    fname = key.replace("/", "__") + ".npy"
+                    np.save(os.path.join(tmp, fname), arr)
+                with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                    json.dump(
+                        {"meta": meta, "keys": [k for k, _ in host_leaves]},
+                        f,
+                    )
+                if os.path.exists(final):
+                    shutil.rmtree(final)
+                os.rename(tmp, final)
+                self._gc()
+            except Exception as e:  # pragma: no cover - surfaced via wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+        if blocking:
+            self.wait()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self) -> None:
+        steps = sorted(self.available_steps())
+        for s in steps[: -self.keep] if self.keep > 0 else []:
+            shutil.rmtree(
+                os.path.join(self.directory, f"step_{s:08d}"),
+                ignore_errors=True,
+            )
+
+    # -- restore -----------------------------------------------------------------
+
+    def available_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                if os.path.exists(
+                    os.path.join(self.directory, name, "manifest.json")
+                ):
+                    out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.available_steps()
+        return steps[-1] if steps else None
+
+    def restore(
+        self,
+        template: Any,
+        step: int | None = None,
+        put: Callable[[str, np.ndarray], Any] | None = None,
+    ) -> tuple[Any, dict]:
+        """Restore into the structure of ``template``.  ``put`` maps
+        (tree-path key, host array) → device array; default is plain
+        jnp.asarray (single device)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        path = os.path.join(self.directory, f"step_{step:08d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+
+        leaves = _flatten_with_paths(template)
+        restored = []
+        for key, tmpl in leaves:
+            fname = key.replace("/", "__") + ".npy"
+            arr = np.load(os.path.join(path, fname))
+            if put is not None:
+                restored.append(put(key, arr))
+            else:
+                import jax.numpy as jnp
+
+                restored.append(jnp.asarray(arr))
+        tree = jax.tree_util.tree_structure(template)
+        return (
+            jax.tree_util.tree_unflatten(tree, restored),
+            manifest["meta"],
+        )
+
+
+def restore_resharded(
+    manager: CheckpointManager,
+    template: Any,
+    specs: Any,  # pytree of PartitionSpec matching template
+    mesh,
+    step: int | None = None,
+) -> tuple[Any, dict]:
+    """Elastic restore: place every leaf with the *target* mesh's sharding —
+    the checkpoint's original mesh shape is irrelevant (logical layout)."""
+    from jax.sharding import NamedSharding
+
+    flat_specs = {
+        k: s
+        for (k, _), s in zip(
+            _flatten_with_paths(template), jax.tree.leaves(
+                specs, is_leaf=lambda x: hasattr(x, "_cls") or
+                type(x).__name__ == "PartitionSpec"
+            )
+        )
+    }
+
+    def put(key, arr):
+        spec = flat_specs.get(key)
+        if mesh is None or spec is None:
+            import jax.numpy as jnp
+
+            return jnp.asarray(arr)
+        return jax.device_put(arr, NamedSharding(mesh, spec))
+
+    return manager.restore(template, step=step, put=put)

@@ -1,0 +1,36 @@
+"""qwen1.5-32b [hf:Qwen/Qwen1.5-32B]: 64L, d_model 5120, 40H (kv=40... the
+assignment lists GQA kv=40, i.e. full MHA at this size), d_ff 27392,
+vocab 152064.  QKV bias (the Qwen1.5 signature), RoPE + SwiGLU.
+
+decode_32k note: bf16 KV would be 5.5 TB global (21.5 GB/chip at 256 chips,
+> 16 GB HBM) — the config enables int8 KV quantization (serving), bringing
+the cache to ~10.8 GB/chip.  Recorded in EXPERIMENTS.md §Dry-run.
+"""
+
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen1.5-32b",
+        family="dense",
+        n_layers=64,
+        d_model=5120,
+        n_heads=40,
+        n_kv_heads=40,
+        d_ff=27392,
+        vocab=152064,
+        activation="swiglu",
+        norm="rmsnorm",
+        qkv_bias=True,
+        rope_theta=1_000_000.0,
+        kv_quant=True,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return config().scaled(
+        name="qwen1.5-32b-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=4, head_dim=16, d_ff=160, vocab=256,
+        dtype="float32", remat=False,
+    )

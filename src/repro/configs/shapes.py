@@ -1,0 +1,88 @@
+"""Assigned input shapes and per-(arch × shape) applicability.
+
+Four shapes per LM architecture (seq_len × global_batch):
+
+* ``train_4k``    4 096 × 256   — training step
+* ``prefill_32k`` 32 768 × 32   — inference prefill
+* ``decode_32k``  32 768 × 128  — one new token, 32k KV cache
+* ``long_500k``   524 288 × 1   — long-context decode (sub-quadratic only)
+
+``long_500k`` is SKIPPED for pure full-attention archs (quadratic attention
+at 524 288 tokens) and RUNS for SSM/hybrid (rwkv6-3b, recurrentgemma-2b) —
+see DESIGN.md §Arch-applicability.  ``input_specs`` returns weak-type-
+correct ShapeDtypeStructs: no device allocation, shardable, exactly what
+``jax.jit(...).lower()`` needs for the multi-pod dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+SHAPE_NAMES = tuple(SHAPES)
+
+
+def applicable(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped) for one (arch × shape) cell."""
+    spec = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        return False, (
+            "long_500k needs sub-quadratic attention; "
+            f"{cfg.name} is pure full-attention (skip per assignment)"
+        )
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    spec = SHAPES[shape_name]
+    b, s = spec.global_batch, spec.seq_len
+    tok = jnp.int32
+    out: dict = {}
+    if spec.kind == "train":
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), tok)
+        if cfg.family == "encdec":
+            out["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.enc_frames, cfg.d_model), cfg.jdtype
+            )
+        if cfg.family == "vlm":
+            out["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_patches, cfg.d_model), cfg.jdtype
+            )
+    elif spec.kind == "prefill":
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), tok)
+        if cfg.family == "encdec":
+            out["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.enc_frames, cfg.d_model), cfg.jdtype
+            )
+        if cfg.family == "vlm":
+            out["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_patches, cfg.d_model), cfg.jdtype
+            )
+    else:  # decode: one new token against a seq_len cache
+        out["tokens"] = jax.ShapeDtypeStruct((b, 1), tok)
+    return out
+
+
+def decode_cache_len(shape_name: str) -> int:
+    return SHAPES[shape_name].seq_len

@@ -1,0 +1,44 @@
+"""Lightning's core abstractions, adapted from GPU clusters to TPU meshes.
+
+Public API (mirrors the paper's host-code surface, Fig. 9):
+
+* :class:`~repro.core.launch.Context` — the driver: array factory + launches
+* :class:`~repro.core.launch.KernelDef` — annotated kernel definitions
+* distributions — :class:`BlockDist`, :class:`RowDist`, :class:`ColDist`,
+  :class:`TileDist`, :class:`StencilDist`, :class:`ReplicatedDist`
+* work distributions — :class:`BlockWork`, :class:`EvenWork`,
+  :class:`TileWork`, :class:`MeshWork`
+* :func:`~repro.core.annotations.parse` — the data-annotation DSL
+"""
+
+from .annotations import Annotation, AnnotationError, parse
+from .dist_array import DistributedArray, make_array
+from .distributions import (
+    BlockDist,
+    Chunk,
+    ColDist,
+    CustomDist,
+    Distribution,
+    ReplicatedDist,
+    RowDist,
+    StencilDist,
+    TileDist,
+)
+from .launch import Context, KernelDef, SuperblockInfo
+from .memory import HardwareModel, MemoryManager, OutOfMemory, Tier
+from .ndrange import Affine, Region
+from .plan_ir import ArgPlan, CommPattern, ExecutionPlan, LaunchPlan, TaskKind
+from .planner import ArrayMeta, Planner, Topology
+from .scheduler import SimResult, Simulator
+from .superblock import BlockWork, EvenWork, MeshWork, Superblock, TileWork
+
+__all__ = [
+    "Affine", "Annotation", "AnnotationError", "ArgPlan", "ArrayMeta",
+    "BlockDist", "BlockWork", "Chunk", "ColDist", "CommPattern", "Context",
+    "CustomDist", "DistributedArray", "Distribution", "EvenWork",
+    "ExecutionPlan", "HardwareModel", "KernelDef", "LaunchPlan", "make_array",
+    "MemoryManager", "MeshWork", "OutOfMemory", "parse", "Planner", "Region",
+    "ReplicatedDist", "RowDist", "SimResult", "Simulator", "StencilDist",
+    "Superblock", "SuperblockInfo", "TaskKind", "Tier", "TileDist",
+    "TileWork", "Topology",
+]

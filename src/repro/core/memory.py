@@ -1,0 +1,213 @@
+"""Memory manager with hierarchical spilling (paper §3.4).
+
+Every worker owns a memory manager that tracks where each chunk lives —
+device memory (HBM), host memory, or disk — and migrates chunks on demand:
+
+* **staging** materializes a task's chunks in device memory before execution
+  (all-or-nothing per task, to avoid deadlock);
+* when a tier is full, **least-recently-used unpinned chunks are evicted** to
+  the next tier (HBM → host → disk);
+* allocation uses pre-sized pools (the paper found cudaMalloc/pinned-alloc
+  expensive; we model pool hits as free and pool misses with a fixed cost).
+
+On real TPU hardware the HBM↔host tier maps to host offloading and the
+chunk-streaming path in :mod:`repro.core.launch`; this module is the
+discrete-cost model used by the scheduler simulator to reproduce the paper's
+chunk-size and spilling experiments (C1/C2) on CPU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from collections import OrderedDict
+
+
+class Tier(enum.IntEnum):
+    DEVICE = 0
+    HOST = 1
+    DISK = 2
+
+
+@dataclasses.dataclass
+class HardwareModel:
+    """Cost-model constants.  Defaults approximate one TPU v5e chip + host;
+    ``paper_p100()`` gives the paper's platform for figure reproduction."""
+
+    flops: float = 197e12  # peak FLOP/s (bf16)
+    hbm_bw: float = 819e9  # bytes/s
+    device_capacity: float = 16e9  # bytes HBM
+    host_link_bw: float = 32e9  # device<->host bytes/s (PCIe-ish)
+    host_capacity: float = 448e9
+    disk_bw: float = 1.0e9
+    disk_capacity: float = 3e12
+    net_bw: float = 7e9  # inter-node per-link (IB FDR in the paper)
+    ici_bw: float = 50e9  # intra-pod inter-chip (TPU ICI per link)
+    task_overhead: float = 50e-6  # scheduler+launch overhead per task
+    alloc_cost: float = 200e-6  # pool-miss allocation
+    staging_throttle: float = 2e9  # max bytes staged in flight (paper: 2 GB)
+
+    @staticmethod
+    def paper_p100() -> "HardwareModel":
+        return HardwareModel(
+            flops=9.5e12,  # P100 fp32 (with FMA) ~9.5 TFLOP/s — SGEMM-like
+            hbm_bw=732e9,
+            device_capacity=16e9,
+            host_link_bw=16e9,  # PCIe 3.0 x16
+            host_capacity=448e9,
+            disk_bw=1.0e9,  # temp SSD
+            disk_capacity=3e12,
+            net_bw=7e9,  # InfiniBand FDR
+            ici_bw=16e9,  # P2P over PCIe
+        )
+
+
+@dataclasses.dataclass
+class ChunkInfo:
+    key: tuple[str, int]
+    size: int
+    tier: Tier = Tier.HOST
+    pinned: int = 0  # staged-task refcount; pinned chunks cannot evict
+
+
+class OutOfMemory(RuntimeError):
+    pass
+
+
+class MemoryManager:
+    """LRU spilling across DEVICE → HOST → DISK for one worker."""
+
+    def __init__(self, hw: HardwareModel):
+        self.hw = hw
+        self.capacity = {
+            Tier.DEVICE: hw.device_capacity,
+            Tier.HOST: hw.host_capacity,
+            Tier.DISK: hw.disk_capacity,
+        }
+        self.used = {t: 0.0 for t in Tier}
+        self.chunks: dict[tuple[str, int], ChunkInfo] = {}
+        # LRU order per tier (front = least recently used).
+        self.lru: dict[Tier, OrderedDict] = {t: OrderedDict() for t in Tier}
+        self.stats = {
+            "h2d_bytes": 0.0, "d2h_bytes": 0.0,
+            "host2disk_bytes": 0.0, "disk2host_bytes": 0.0,
+            "evictions": 0, "pool_misses": 0,
+        }
+
+    # -- bookkeeping ---------------------------------------------------------
+
+    def register(self, key: tuple[str, int], size: int,
+                 tier: Tier = Tier.HOST) -> None:
+        if key in self.chunks:
+            return
+        info = ChunkInfo(key, size, tier)
+        self.chunks[key] = info
+        self._account_add(info, tier)
+
+    def delete(self, key: tuple[str, int]) -> None:
+        info = self.chunks.pop(key, None)
+        if info is not None:
+            self._account_remove(info)
+
+    def _account_add(self, info: ChunkInfo, tier: Tier) -> None:
+        info.tier = tier
+        self.used[tier] += info.size
+        self.lru[tier][info.key] = None
+
+    def _account_remove(self, info: ChunkInfo) -> None:
+        self.used[info.tier] -= info.size
+        self.lru[info.tier].pop(info.key, None)
+
+    def touch(self, key: tuple[str, int]) -> None:
+        info = self.chunks[key]
+        self.lru[info.tier].move_to_end(info.key)
+
+    # -- staging ----------------------------------------------------------------
+
+    def stage(self, keys: list[tuple[str, int]]) -> float:
+        """Materialize all chunks in DEVICE memory (all-or-nothing) and pin
+        them.  Returns the modeled transfer time (seconds) this staging
+        costs; concurrent stagings overlap in the scheduler."""
+        total_new = sum(
+            self.chunks[k].size for k in keys
+            if self.chunks[k].tier != Tier.DEVICE
+        )
+        pinned_dev = sum(
+            c.size for c in self.chunks.values()
+            if c.tier is Tier.DEVICE and c.pinned > 0
+        )
+        if total_new + pinned_dev > self.capacity[Tier.DEVICE]:
+            raise OutOfMemory(
+                f"task working set {total_new + pinned_dev:.3e} B exceeds "
+                f"device capacity {self.capacity[Tier.DEVICE]:.3e} B"
+            )
+        cost = 0.0
+        for k in keys:
+            info = self.chunks[k]
+            if info.tier is not Tier.DEVICE:
+                cost += self._promote(info)
+            info.pinned += 1
+            self.touch(k)
+        return cost
+
+    def unstage(self, keys: list[tuple[str, int]]) -> None:
+        for k in keys:
+            info = self.chunks.get(k)
+            if info is not None and info.pinned > 0:
+                info.pinned -= 1
+
+    # -- migration ---------------------------------------------------------------
+
+    def _promote(self, info: ChunkInfo) -> float:
+        """Bring a chunk up one or two tiers into DEVICE; returns seconds."""
+        cost = 0.0
+        if info.tier is Tier.DISK:
+            cost += self._make_room(Tier.HOST, info.size)
+            cost += info.size / self.hw.disk_bw
+            self.stats["disk2host_bytes"] += info.size
+            self._account_remove(info)
+            self._account_add(info, Tier.HOST)
+        if info.tier is Tier.HOST:
+            cost += self._make_room(Tier.DEVICE, info.size)
+            cost += info.size / self.hw.host_link_bw
+            self.stats["h2d_bytes"] += info.size
+            self._account_remove(info)
+            self._account_add(info, Tier.DEVICE)
+        return cost
+
+    def _make_room(self, tier: Tier, size: int) -> float:
+        cost = 0.0
+        while self.used[tier] + size > self.capacity[tier]:
+            victim_key = next(
+                (k for k in self.lru[tier] if self.chunks[k].pinned == 0),
+                None,
+            )
+            if victim_key is None:
+                raise OutOfMemory(
+                    f"cannot free {size:.3e} B in {tier.name}: all pinned"
+                )
+            victim = self.chunks[victim_key]
+            cost += self._demote(victim)
+            self.stats["evictions"] += 1
+        return cost
+
+    def _demote(self, info: ChunkInfo) -> float:
+        nxt = Tier(info.tier + 1)
+        cost = self._make_room(nxt, info.size)
+        if info.tier is Tier.DEVICE:
+            cost += info.size / self.hw.host_link_bw
+            self.stats["d2h_bytes"] += info.size
+        else:
+            cost += info.size / self.hw.disk_bw
+            self.stats["host2disk_bytes"] += info.size
+        self._account_remove(info)
+        self._account_add(info, nxt)
+        return cost
+
+    # -- introspection --------------------------------------------------------------
+
+    def tier_of(self, key: tuple[str, int]) -> Tier:
+        return self.chunks[key].tier
+
+    def device_bytes(self) -> float:
+        return self.used[Tier.DEVICE]

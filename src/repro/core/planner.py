@@ -1,0 +1,517 @@
+"""Lightning's execution planner (paper §2.4), adapted to TPU meshes.
+
+For every distributed kernel launch the planner:
+
+1. splits the launch grid into superblocks (``WorkDistribution``);
+2. evaluates the kernel's data annotation per superblock → *access regions*;
+3. queries each argument's chunk distribution for intersecting chunks;
+4. classifies the argument into a :class:`CommPattern` and emits the
+   data-movement tasks (Copy/Send/Recv/Gather/Reduce) into the task DAG;
+5. adds cross-launch dependency edges on chunk conflicts (write-read,
+   write-write, read-write) so the asynchronous execution stays sequentially
+   consistent (paper cites Lamport [21]).
+
+The same classification drives the JAX lowering: LOCAL → no collective,
+HALO → ``ppermute`` exchange, GATHER → ``all_gather``, REDUCE →
+``psum``/``psum_scatter`` with a hierarchical (device → pod → cross-pod)
+schedule, SCATTER → temp chunk + dynamic-slice scatter.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Mapping, Sequence
+
+from .annotations import Annotation, REDUCE, WRITE
+from .distributions import Chunk, Distribution, ReplicatedDist
+from .ndrange import Region
+from .plan_ir import (
+    ArgPlan,
+    ChunkRef,
+    CommPattern,
+    ExecutionPlan,
+    LaunchPlan,
+    Task,
+    TaskKind,
+)
+from .superblock import Superblock, WorkDistribution
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrayMeta:
+    """What the planner needs to know about one distributed array."""
+
+    name: str
+    shape: tuple[int, ...]
+    dtype_size: int
+    dist: Distribution
+
+    @property
+    def nbytes(self) -> int:
+        return math.prod(self.shape) * self.dtype_size
+
+
+@dataclasses.dataclass
+class ChunkState:
+    """Version/conflict bookkeeping for sequential consistency."""
+
+    last_writer: int | None = None  # task id
+    readers_since_write: list[int] = dataclasses.field(default_factory=list)
+    version: int = 0
+
+
+class ChunkStateTable:
+    """Tracks, per (array, chunk), the last writer and readers across
+    launches.  The planner consults it to add conflict edges — this is how
+    consecutive asynchronous launches are stitched into one large DAG."""
+
+    def __init__(self) -> None:
+        self._state: dict[tuple[str, int], ChunkState] = {}
+
+    def state(self, ref: ChunkRef) -> ChunkState:
+        return self._state.setdefault(ref.key(), ChunkState())
+
+    def read_deps(self, ref: ChunkRef) -> list[int]:
+        st = self.state(ref)
+        return [st.last_writer] if st.last_writer is not None else []
+
+    def write_deps(self, ref: ChunkRef) -> list[int]:
+        st = self.state(ref)
+        deps = list(st.readers_since_write)
+        if st.last_writer is not None:
+            deps.append(st.last_writer)
+        return deps
+
+    def note_read(self, ref: ChunkRef, tid: int) -> None:
+        self.state(ref).readers_since_write.append(tid)
+
+    def note_write(self, ref: ChunkRef, tid: int) -> None:
+        st = self.state(ref)
+        st.last_writer = tid
+        st.readers_since_write = []
+        st.version += 1
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """Devices grouped into nodes (pods).  Flat device ids are contiguous per
+    node: node(d) = d // devices_per_node."""
+
+    num_devices: int
+    devices_per_node: int = 4
+
+    def node(self, device: int) -> int:
+        return device // self.devices_per_node
+
+    def same_node(self, a: int, b: int) -> bool:
+        return self.node(a) == self.node(b)
+
+    @property
+    def num_nodes(self) -> int:
+        return math.ceil(self.num_devices / self.devices_per_node)
+
+
+class Planner:
+    """Builds :class:`LaunchPlan`s and stitches them via a shared
+    :class:`ChunkStateTable`."""
+
+    def __init__(self, topology: Topology):
+        self.topology = topology
+        self.chunk_state = ChunkStateTable()
+
+    # -- main entry point ------------------------------------------------------
+
+    def plan_launch(
+        self,
+        name: str,
+        annotation: Annotation,
+        grid: Sequence[int],
+        work_dist: WorkDistribution,
+        arrays: Mapping[str, ArrayMeta],
+        block_shape: Sequence[int] | None = None,
+        plan: ExecutionPlan | None = None,
+    ) -> LaunchPlan:
+        nd = self.topology.num_devices
+        grid = tuple(int(g) for g in grid)
+        superblocks = work_dist.superblocks(grid, nd)
+        if plan is None:
+            # Standalone plan: task ids restart at 0, so cross-launch chunk
+            # state (which stores task ids) must reset too.  Callers that
+            # want launch stitching (sequential consistency across launches)
+            # pass one shared ExecutionPlan — e.g. Context does.
+            plan = ExecutionPlan(launch_name=name)
+            self.chunk_state = ChunkStateTable()
+
+        # Classify every argument once (patterns are superblock-uniform for
+        # the distributions we ship; per-superblock deviations fall back to
+        # GATHER/SCATTER which are always correct — paper §2.4: distributions
+        # affect performance, not correctness).
+        arg_plans = [
+            self._classify_arg(annotation, stmt_array, grid, superblocks,
+                               arrays, block_shape)
+            for stmt_array in annotation.arrays()
+        ]
+        arg_by_name = {a.array: a for a in arg_plans}
+
+        # Emit tasks per superblock.
+        reduce_partials: dict[str, list[Task]] = {}
+        for sb in superblocks:
+            env = annotation.env_for_superblock(sb, block_shape=block_shape)
+            exec_deps: list[int] = []
+            exec_reads: list[ChunkRef] = []
+            exec_writes: list[ChunkRef] = []
+
+            for stmt in annotation.stmts:
+                meta = arrays[stmt.array]
+                region = stmt.region(env, meta.shape)
+                chunks = meta.dist.query(region, meta.shape, nd)
+                ap = arg_by_name[stmt.array]
+
+                if stmt.mode == REDUCE:
+                    # Temp chunk for block-level partials (paper: "the planner
+                    # handles reduce accesses separately").
+                    tmp = ChunkRef(stmt.array, 10_000 + sb.index, temp=True)
+                    t = plan.add(
+                        TaskKind.CREATE_CHUNK,
+                        sb.owner,
+                        bytes=region.volume * meta.dtype_size,
+                        writes=[tmp],
+                        region=region,
+                        label=f"partial:{stmt.array}",
+                    )
+                    exec_deps.append(t.tid)
+                    exec_writes.append(tmp)
+                    reduce_partials.setdefault(stmt.array, [])
+                    continue
+
+                if stmt.reads:
+                    deps, refs, moved = self._stage_reads(
+                        plan, sb, region, meta, chunks
+                    )
+                    exec_deps.extend(deps)
+                    exec_reads.extend(refs)
+                if stmt.writes:
+                    local = [c for c in chunks if c.owner == sb.owner]
+                    targets = local if local else chunks
+                    for c in targets:
+                        ref = ChunkRef(stmt.array, c.index)
+                        exec_deps.extend(self.chunk_state.write_deps(ref))
+                        exec_writes.append(ref)
+
+            et = plan.add(
+                TaskKind.EXECUTE,
+                sb.owner,
+                deps=sorted(set(exec_deps)),
+                reads=exec_reads,
+                writes=exec_writes,
+                superblock=sb.index,
+                region=sb.threads,
+                flops=sb.threads.volume,
+                label=name,
+            )
+            for ref in exec_reads:
+                if not ref.temp:
+                    self.chunk_state.note_read(ref, et.tid)
+            for ref in exec_writes:
+                if not ref.temp:
+                    self.chunk_state.note_write(ref, et.tid)
+            for arr in reduce_partials:
+                reduce_partials[arr].append(et)
+
+            # Post-write replica sync for overlapping distributions.
+            for stmt in annotation.stmts:
+                meta = arrays[stmt.array]
+                if stmt.mode == WRITE and meta.dist.halo is not None:
+                    plan.add(
+                        TaskKind.SYNC_REPLICAS,
+                        sb.owner,
+                        deps=[et.tid],
+                        bytes=self._halo_bytes(meta),
+                        label=f"halo:{stmt.array}",
+                    )
+
+        # Hierarchical reduction trees (superblock → device → node → root).
+        for arr, partial_execs in reduce_partials.items():
+            stmt = annotation.stmt_for(arr)
+            self._emit_reduction_tree(
+                plan, arrays[arr], stmt.reduce_op or "+", partial_execs
+            )
+
+        plan.validate()
+        return LaunchPlan(
+            name=name,
+            plan=plan,
+            args=tuple(arg_plans),
+            num_superblocks=len(superblocks),
+            grid=grid,
+        )
+
+    # -- argument classification ----------------------------------------------
+
+    def _classify_arg(
+        self,
+        annotation: Annotation,
+        array: str,
+        grid: tuple[int, ...],
+        superblocks: Sequence[Superblock],
+        arrays: Mapping[str, ArrayMeta],
+        block_shape: Sequence[int] | None,
+    ) -> ArgPlan:
+        stmt = annotation.stmt_for(array)
+        meta = arrays[array]
+        nd = self.topology.num_devices
+
+        if stmt.mode == REDUCE:
+            pass  # reduce wins over storage: partials + tree regardless
+        elif isinstance(meta.dist, ReplicatedDist) or meta.dist.replicated:
+            # Reads are free; writes need a replica broadcast.
+            comm = meta.nbytes * (nd - 1) if stmt.writes else 0
+            return ArgPlan(array, CommPattern.REPLICATED, stmt.mode,
+                           stmt.reduce_op, comm_bytes=comm,
+                           note="replicated distribution")
+
+        if stmt.mode == REDUCE:
+            # log-tree over devices on the partial region size.
+            env0 = annotation.env_for_superblock(superblocks[0], block_shape)
+            region0 = stmt.region(env0, meta.shape)
+            comm = region0.volume * meta.dtype_size * max(
+                1, int(math.log2(max(2, nd)))
+            )
+            return ArgPlan(array, CommPattern.REDUCE, stmt.mode, stmt.reduce_op,
+                           comm_bytes=comm)
+
+        # Inspect the relationship between access regions and owned chunks.
+        worst = CommPattern.LOCAL
+        halo: tuple[int, ...] | None = None
+        comm_bytes = 0
+        for sb in superblocks:
+            env = annotation.env_for_superblock(sb, block_shape=block_shape)
+            region = stmt.region(env, meta.shape)
+            chunks = meta.dist.query(region, meta.shape, nd)
+            local = [c for c in chunks if c.owner == sb.owner]
+            if any((c.interior or c.region).contains(region) for c in local):
+                continue  # fits in the owned interior: no communication
+            if meta.dist.halo is not None and any(
+                c.region.contains(region) for c in local
+            ):
+                # Fits in the haloed chunk but not the interior: in the JAX
+                # lowering shards store interiors only, so this is a halo
+                # exchange (the simulator's SYNC_REPLICAS carries the same
+                # bytes).
+                h = meta.dist.halo
+                worst = _max_pattern(worst, CommPattern.HALO)
+                if halo is None:
+                    halo = h
+                else:
+                    n_ax = max(len(halo), len(h))
+                    pa = tuple(halo) + (0,) * (n_ax - len(halo))
+                    pb = tuple(h) + (0,) * (n_ax - len(h))
+                    halo = tuple(max(a, b) for a, b in zip(pa, pb))
+                comm_bytes += self._halo_bytes(meta) // max(1, len(superblocks))
+                continue
+            enclosing = meta.dist.find_enclosing(region, meta.shape, nd)
+            if enclosing is not None and len(chunks) <= 2 and local:
+                # Region = local chunk extended by a bounded shift → halo.
+                own = local[0].interior or local[0].region
+                h = tuple(
+                    max(own.intervals[d][0] - region.intervals[d][0],
+                        region.intervals[d][1] - own.intervals[d][1], 0)
+                    for d in range(region.ndim)
+                )
+                if max(h, default=0) * 4 <= min(
+                    (own.shape[d] for d in range(own.ndim) if h[d]), default=1
+                ) or meta.dist.halo is not None:
+                    worst = _max_pattern(worst, CommPattern.HALO)
+                    halo = h if halo is None else tuple(map(max, halo, h))
+                    comm_bytes += (
+                        region.volume - region.intersect(own).volume
+                    ) * meta.dtype_size
+                    continue
+            # Fallback: temp-chunk assembly == gather (always correct).
+            if stmt.writes and not stmt.reads:
+                worst = _max_pattern(worst, CommPattern.SCATTER)
+            else:
+                worst = _max_pattern(worst, CommPattern.GATHER)
+            remote = [c for c in chunks if c.owner != sb.owner]
+            comm_bytes += sum(
+                c.region.intersect(region).volume for c in remote
+            ) * meta.dtype_size
+        return ArgPlan(array, worst, stmt.mode, stmt.reduce_op,
+                       halo_width=halo, comm_bytes=comm_bytes)
+
+    # -- read staging -----------------------------------------------------------
+
+    def _stage_reads(
+        self,
+        plan: ExecutionPlan,
+        sb: Superblock,
+        region: Region,
+        meta: ArrayMeta,
+        chunks: Sequence[Chunk],
+    ) -> tuple[list[int], list[ChunkRef], int]:
+        """Make ``region`` of ``meta`` available on ``sb.owner``; returns
+        (deps for the execute task, chunk refs read, bytes moved)."""
+        deps: list[int] = []
+        refs: list[ChunkRef] = []
+        moved = 0
+        local_enclosing = [
+            c for c in chunks
+            if c.owner == sb.owner and c.region.contains(region)
+        ]
+        if local_enclosing:
+            ref = ChunkRef(meta.name, local_enclosing[0].index)
+            deps.extend(self.chunk_state.read_deps(ref))
+            refs.append(ref)
+            return deps, refs, 0
+
+        remote_enclosing = [c for c in chunks if c.region.contains(region)]
+        if remote_enclosing:
+            # Single remote chunk: Copy (same node) or Send+Recv (cross node).
+            src = remote_enclosing[0]
+            src_ref = ChunkRef(meta.name, src.index)
+            tmp = ChunkRef(meta.name, 20_000 + sb.index, temp=True)
+            nbytes = region.volume * meta.dtype_size
+            rdeps = self.chunk_state.read_deps(src_ref)
+            if self.topology.same_node(src.owner, sb.owner):
+                t = plan.add(TaskKind.COPY, src.owner, deps=rdeps,
+                             reads=[src_ref], writes=[tmp], region=region,
+                             bytes=nbytes, peer=sb.owner,
+                             label=f"p2p:{meta.name}")
+                deps.append(t.tid)
+            else:
+                s = plan.add(TaskKind.SEND, src.owner, deps=rdeps,
+                             reads=[src_ref], region=region, bytes=nbytes,
+                             peer=sb.owner, label=f"send:{meta.name}")
+                r = plan.add(TaskKind.RECV, sb.owner, deps=[s.tid],
+                             writes=[tmp], region=region, bytes=nbytes,
+                             peer=src.owner, label=f"recv:{meta.name}")
+                deps.append(r.tid)
+            self.chunk_state.note_read(src_ref, deps[-1])
+            refs.append(tmp)
+            return deps, refs, nbytes
+
+        # Exceptional case (paper Fig. 2c): assemble a temp chunk from all
+        # intersecting chunks.
+        tmp = ChunkRef(meta.name, 30_000 + sb.index, temp=True)
+        ct = plan.add(TaskKind.CREATE_CHUNK, sb.owner, writes=[tmp],
+                      region=region, bytes=region.volume * meta.dtype_size,
+                      label=f"assemble:{meta.name}")
+        gather_deps = [ct.tid]
+        for c in chunks:
+            part = c.region.intersect(region)
+            if part.is_empty:
+                continue
+            src_ref = ChunkRef(meta.name, c.index)
+            nbytes = part.volume * meta.dtype_size
+            rdeps = self.chunk_state.read_deps(src_ref) + [ct.tid]
+            if c.owner == sb.owner:
+                t = plan.add(TaskKind.COPY, c.owner, deps=rdeps,
+                             reads=[src_ref], writes=[tmp], region=part,
+                             bytes=nbytes, peer=sb.owner,
+                             label=f"gather:{meta.name}")
+                gather_deps.append(t.tid)
+            elif self.topology.same_node(c.owner, sb.owner):
+                t = plan.add(TaskKind.COPY, c.owner, deps=rdeps,
+                             reads=[src_ref], writes=[tmp], region=part,
+                             bytes=nbytes, peer=sb.owner,
+                             label=f"gather:{meta.name}")
+                gather_deps.append(t.tid)
+                moved += nbytes
+            else:
+                s = plan.add(TaskKind.SEND, c.owner, deps=rdeps,
+                             reads=[src_ref], region=part, bytes=nbytes,
+                             peer=sb.owner, label=f"gather-send:{meta.name}")
+                r = plan.add(TaskKind.RECV, sb.owner, deps=[s.tid],
+                             writes=[tmp], region=part, bytes=nbytes,
+                             peer=c.owner, label=f"gather-recv:{meta.name}")
+                gather_deps.append(r.tid)
+                moved += nbytes
+            self.chunk_state.note_read(src_ref, gather_deps[-1])
+        deps.extend(gather_deps)
+        refs.append(tmp)
+        return deps, refs, moved
+
+    # -- reductions --------------------------------------------------------------
+
+    def _emit_reduction_tree(
+        self,
+        plan: ExecutionPlan,
+        meta: ArrayMeta,
+        op: str,
+        partial_execs: Sequence[Task],
+    ) -> None:
+        """Hierarchical reduction: superblock partials → per-device → per-node
+        → global root, then broadcast/scatter into the owning chunks (paper:
+        "first the results for one superblock, then for one GPU, then for each
+        node, and finally ... across all nodes")."""
+        level = [(t.worker, t.tid) for t in partial_execs]
+        nbytes = meta.nbytes  # partial result has the output's region size
+
+        def reduce_group(items: list[tuple[int, int]], home: int) -> tuple[int, int]:
+            deps = [tid for _, tid in items]
+            t = plan.add(TaskKind.REDUCE, home, deps=deps, reduce_op=op,
+                         bytes=nbytes * max(0, len(items) - 1),
+                         label=f"reduce:{meta.name}")
+            return (home, t.tid)
+
+        # per-device
+        by_dev: dict[int, list[tuple[int, int]]] = {}
+        for w, tid in level:
+            by_dev.setdefault(w, []).append((w, tid))
+        level = [reduce_group(v, d) for d, v in sorted(by_dev.items())]
+        # per-node
+        by_node: dict[int, list[tuple[int, int]]] = {}
+        for w, tid in level:
+            by_node.setdefault(self.topology.node(w), []).append((w, tid))
+        lvl2 = []
+        for node, items in sorted(by_node.items()):
+            home = items[0][0]
+            if len(items) > 1:
+                for w, tid in items[1:]:
+                    s = plan.add(TaskKind.COPY, w, deps=[tid], bytes=nbytes,
+                                 peer=home, label=f"reduce-move:{meta.name}")
+                    items[items.index((w, tid))] = (w, s.tid)
+                lvl2.append(reduce_group(items, home))
+            else:
+                lvl2.append(items[0])
+        # across nodes
+        if len(lvl2) > 1:
+            root = lvl2[0][0]
+            staged = [lvl2[0]]
+            for w, tid in lvl2[1:]:
+                s = plan.add(TaskKind.SEND, w, deps=[tid], bytes=nbytes,
+                             peer=root, label=f"reduce-send:{meta.name}")
+                r = plan.add(TaskKind.RECV, root, deps=[s.tid], bytes=nbytes,
+                             peer=w, label=f"reduce-recv:{meta.name}")
+                staged.append((root, r.tid))
+            reduce_group(staged, root)
+
+    # -- misc ---------------------------------------------------------------------
+
+    def _halo_bytes(self, meta: ArrayMeta) -> int:
+        h = meta.dist.halo
+        if not h:
+            return 0
+        per_axis = 0
+        for ax, width in enumerate(h):
+            if width:
+                cross = math.prod(
+                    s for i, s in enumerate(meta.shape) if i != ax
+                )
+                per_axis += 2 * width * cross * meta.dtype_size
+        return per_axis
+
+
+_ORDER = [
+    CommPattern.LOCAL,
+    CommPattern.HALO,
+    CommPattern.SCATTER,
+    CommPattern.GATHER,
+]
+
+
+def _max_pattern(a: CommPattern, b: CommPattern) -> CommPattern:
+    ia = _ORDER.index(a) if a in _ORDER else len(_ORDER)
+    ib = _ORDER.index(b) if b in _ORDER else len(_ORDER)
+    return a if ia >= ib else b

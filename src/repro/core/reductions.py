@@ -1,0 +1,74 @@
+"""Reduction support for ``reduce(f)`` annotations (paper §2.3–2.4).
+
+Lightning allocates temporary memory for block-level partials and then
+performs a multi-level reduction: superblock → device → node → global.  In
+the JAX lowering the device/node/global levels collapse into one collective
+whose schedule XLA hierarchically decomposes over the mesh; we expose both
+the per-op combining functions (for the simulator and single-device path)
+and the collective lowering (for ``shard_map``).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+#: op string → (combining fn, identity element factory)
+REDUCE_FNS: dict[str, tuple[Callable, Callable]] = {
+    "+": (jnp.add, lambda dtype: jnp.zeros((), dtype)),
+    "*": (jnp.multiply, lambda dtype: jnp.ones((), dtype)),
+    "min": (jnp.minimum, lambda dtype: jnp.array(jnp.finfo(dtype).max
+            if jnp.issubdtype(dtype, jnp.floating)
+            else jnp.iinfo(dtype).max, dtype)),
+    "max": (jnp.maximum, lambda dtype: jnp.array(jnp.finfo(dtype).min
+            if jnp.issubdtype(dtype, jnp.floating)
+            else jnp.iinfo(dtype).min, dtype)),
+}
+
+
+def identity_for(op: str, dtype) -> jax.Array:
+    _, ident = REDUCE_FNS[op]
+    return ident(jnp.dtype(dtype))
+
+
+def combine(op: str, a: jax.Array, b: jax.Array) -> jax.Array:
+    fn, _ = REDUCE_FNS[op]
+    return fn(a, b)
+
+
+def reduce_stack(op: str, parts: Sequence[jax.Array]) -> jax.Array:
+    """Reduce a list of equally-shaped partials (single-device path)."""
+    fn, _ = REDUCE_FNS[op]
+    out = parts[0]
+    for p in parts[1:]:
+        out = fn(out, p)
+    return out
+
+
+def collective_reduce(op: str, x: jax.Array, axis_names) -> jax.Array:
+    """Cross-device reduction inside ``shard_map``.
+
+    ``+``/``min``/``max`` map to native collectives; ``*`` has no TPU
+    collective so we all_gather and combine locally (the paper's tree
+    reduction degenerates to the same traffic for small partials).
+    """
+    if isinstance(axis_names, str):
+        axis_names = (axis_names,)
+    axis_names = tuple(axis_names)
+    if not axis_names:
+        return x
+    if op == "+":
+        return jax.lax.psum(x, axis_names)
+    if op == "min":
+        return jax.lax.pmin(x, axis_names)
+    if op == "max":
+        return jax.lax.pmax(x, axis_names)
+    if op == "*":
+        g = x
+        for ax in axis_names:
+            g = jax.lax.all_gather(g, ax, axis=0)
+            g = jnp.prod(g, axis=0)
+        return g
+    raise ValueError(f"unsupported reduce op {op!r}")

@@ -1,0 +1,210 @@
+"""Per-worker asynchronous scheduler — discrete-event simulator (paper §3.3).
+
+The paper's workers each run a scheduler that (1) waits for task
+dependencies, (2) stages the task's chunks through the memory manager,
+(3) queues the task on the right executor (GPU / copy engine / network), and
+(4) unstages on completion.  Staging is throttled by total in-flight memory
+footprint (~2 GB) to balance prefetch depth against contention.
+
+This module reproduces that pipeline as a discrete-event simulation over an
+:class:`~repro.core.plan_ir.ExecutionPlan`, with task durations from the
+:class:`~repro.core.memory.HardwareModel`.  It exists to (a) reproduce the
+paper's chunk-size / spilling figures on CPU, and (b) let the perf loop
+napkin-math scheduling changes before touching the JAX lowering.
+
+Executors per worker (all overlap, like CUDA streams / ICI DMA):
+  * ``compute``  — kernel execution          (duration = flops / peak)
+  * ``h2d``      — staging transfers          (duration from MemoryManager)
+  * ``copy``     — intra-node chunk copies    (bytes / ici_bw)
+  * ``net``      — inter-node send/recv       (bytes / net_bw)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Callable
+
+from .memory import HardwareModel, MemoryManager, Tier
+from .plan_ir import ExecutionPlan, Task, TaskKind
+
+
+@dataclasses.dataclass
+class SimResult:
+    makespan: float
+    busy: dict[str, float]  # resource -> busy seconds (summed over workers)
+    task_count: int
+    stats: dict[str, float]
+
+    def utilization(self, resource: str = "compute") -> float:
+        return self.busy.get(resource, 0.0) / self.makespan if self.makespan else 0.0
+
+
+_EXECUTOR_FOR = {
+    TaskKind.EXECUTE: "compute",
+    TaskKind.COPY: "copy",
+    TaskKind.SEND: "net",
+    TaskKind.RECV: "net",
+    TaskKind.REDUCE: "compute",
+    TaskKind.CREATE_CHUNK: "h2d",
+    TaskKind.DELETE_CHUNK: "h2d",
+    TaskKind.SYNC_REPLICAS: "copy",
+}
+
+
+class Simulator:
+    """Event-driven execution of a task DAG against the hardware model."""
+
+    def __init__(
+        self,
+        hw: HardwareModel,
+        num_workers: int,
+        flops_per_thread: float = 1.0,
+        bytes_per_thread: float = 0.0,
+        duration_fn: Callable[[Task], float] | None = None,
+        initial_tier: Tier = Tier.HOST,
+    ):
+        self.hw = hw
+        self.num_workers = num_workers
+        self.flops_per_thread = flops_per_thread
+        self.bytes_per_thread = bytes_per_thread
+        self.duration_fn = duration_fn
+        self.initial_tier = initial_tier
+        self.memory = [MemoryManager(hw) for _ in range(num_workers)]
+
+    # -- cost model ---------------------------------------------------------------
+
+    def _duration(self, t: Task) -> float:
+        if self.duration_fn is not None:
+            d = self.duration_fn(t)
+            if d is not None:
+                return d
+        hw = self.hw
+        if t.kind is TaskKind.EXECUTE:
+            # Roofline: max of compute time and HBM time for the superblock.
+            f = t.flops * self.flops_per_thread
+            b = t.flops * self.bytes_per_thread
+            return max(f / hw.flops, b / hw.hbm_bw) + hw.task_overhead
+        if t.kind is TaskKind.COPY:
+            return t.bytes / hw.ici_bw + hw.task_overhead
+        if t.kind in (TaskKind.SEND, TaskKind.RECV):
+            return t.bytes / hw.net_bw + hw.task_overhead
+        if t.kind is TaskKind.REDUCE:
+            return t.bytes / hw.hbm_bw + hw.task_overhead
+        if t.kind is TaskKind.CREATE_CHUNK:
+            return hw.alloc_cost
+        if t.kind is TaskKind.SYNC_REPLICAS:
+            return t.bytes / hw.ici_bw + hw.task_overhead
+        return hw.task_overhead
+
+    # -- simulation -----------------------------------------------------------------
+
+    def run(self, plan: ExecutionPlan, register_chunks: bool = True) -> SimResult:
+        plan.validate()
+        tasks = plan.tasks
+        indeg = {t.tid: len(t.deps) for t in tasks}
+        succ: dict[int, list[int]] = {t.tid: [] for t in tasks}
+        for t in tasks:
+            for d in t.deps:
+                succ[d].append(t.tid)
+
+        if register_chunks:
+            for t in tasks:
+                w = t.worker % self.num_workers
+                for ref in list(t.reads) + list(t.writes):
+                    size = t.bytes or (t.region.volume * 4 if t.region else 0)
+                    tier = self.initial_tier
+                    if (tier is Tier.DEVICE
+                            and self.memory[w].used[Tier.DEVICE] + size
+                            > self.memory[w].capacity[Tier.DEVICE]):
+                        tier = Tier.HOST  # warm start only while it fits
+                    self.memory[w].register(ref.key(), max(1, size),
+                                            tier=tier)
+
+        # Per-worker resource availability times; staging throttle state.
+        res_free: dict[tuple[int, str], float] = {}
+        staged_bytes = [0.0] * self.num_workers
+        busy: dict[str, float] = {}
+        stats: dict[str, float] = {"stage_wait": 0.0}
+
+        # Event queue: (time, seq, kind, payload)
+        events: list[tuple[float, int, str, int]] = []
+        seq = 0
+        ready_at: dict[int, float] = {}
+
+        def push(time: float, kind: str, tid: int) -> None:
+            nonlocal seq
+            heapq.heappush(events, (time, seq, kind, tid))
+            seq += 1
+
+        for t in tasks:
+            if indeg[t.tid] == 0:
+                push(0.0, "ready", t.tid)
+
+        now = 0.0
+        completed = 0
+        # Deferred tasks waiting on the staging throttle, per worker.
+        throttled: dict[int, list[int]] = {w: [] for w in range(self.num_workers)}
+
+        while events:
+            now, _, kind, tid = heapq.heappop(events)
+            t = tasks[tid]
+            w = t.worker % self.num_workers
+
+            if kind == "ready":
+                footprint = sum(
+                    self.memory[w].chunks[r.key()].size
+                    for r in list(t.reads) + list(t.writes)
+                    if r.key() in self.memory[w].chunks
+                )
+                if (staged_bytes[w] + footprint > self.hw.staging_throttle
+                        and staged_bytes[w] > 0):
+                    throttled[w].append(tid)
+                    continue
+                staged_bytes[w] += footprint
+                # Stage chunks (h2d resource serializes transfers).
+                keys = [r.key() for r in list(t.reads) + list(t.writes)
+                        if r.key() in self.memory[w].chunks]
+                stage_cost = self.memory[w].stage(keys)
+                h2d_key = (w, "h2d")
+                start = max(now, res_free.get(h2d_key, 0.0))
+                res_free[h2d_key] = start + stage_cost
+                busy["h2d"] = busy.get("h2d", 0.0) + stage_cost
+                push(start + stage_cost, "staged", tid)
+
+            elif kind == "staged":
+                resource = _EXECUTOR_FOR[t.kind]
+                rkey = (w, resource)
+                dur = self._duration(t)
+                start = max(now, res_free.get(rkey, 0.0))
+                res_free[rkey] = start + dur
+                busy[resource] = busy.get(resource, 0.0) + dur
+                push(start + dur, "done", tid)
+
+            elif kind == "done":
+                completed += 1
+                keys = [r.key() for r in list(t.reads) + list(t.writes)
+                        if r.key() in self.memory[w].chunks]
+                self.memory[w].unstage(keys)
+                footprint = sum(self.memory[w].chunks[k].size for k in keys)
+                staged_bytes[w] = max(0.0, staged_bytes[w] - footprint)
+                # Release throttled tasks.
+                if throttled[w]:
+                    pending, throttled[w] = throttled[w], []
+                    for p in pending:
+                        push(now, "ready", p)
+                for s in succ[tid]:
+                    indeg[s] -= 1
+                    if indeg[s] == 0:
+                        push(now, "ready", s)
+
+        if completed != len(tasks):
+            raise RuntimeError(
+                f"simulation deadlock: {completed}/{len(tasks)} tasks ran"
+            )
+        for m in self.memory:
+            for k, v in m.stats.items():
+                stats[k] = stats.get(k, 0.0) + v
+        return SimResult(
+            makespan=now, busy=busy, task_count=len(tasks), stats=stats
+        )

@@ -1,0 +1,114 @@
+"""Chunk streaming: process arrays larger than device memory (paper §3.4).
+
+On GPU, Lightning spills chunks to host memory and overlaps the PCIe
+transfers with kernel execution.  The TPU-idiomatic equivalent keeps the
+big array in *host* memory (numpy) and streams fixed-size chunks through
+the device with double buffering: while chunk *i* computes, chunk *i+1* is
+already being transferred (`jax.device_put` is async), so transfer and
+compute overlap exactly like the paper's memory-manager pipeline.
+
+``stream_map_reduce`` is the executable form of the paper's K-Means /
+Black-Scholes streaming experiments: a per-chunk kernel plus a running
+reduction, with a working set of exactly two chunks regardless of the
+total data size.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def iter_chunks(array: np.ndarray, chunk_rows: int) -> Iterable[np.ndarray]:
+    for start in range(0, array.shape[0], chunk_rows):
+        yield array[start : start + chunk_rows]
+
+
+def stream_map_reduce(
+    data: np.ndarray,  # host-resident (the "spilled" tier)
+    kernel: Callable[[jax.Array], jax.Array],  # per-chunk device kernel
+    combine: Callable[[jax.Array, jax.Array], jax.Array],
+    init: jax.Array,
+    *,
+    chunk_rows: int,
+    pad_value=0,
+) -> jax.Array:
+    """Fold ``combine(acc, kernel(chunk))`` over host-resident chunks with
+    double buffering.  Device working set: two chunks + the accumulator.
+
+    The final (ragged) chunk is padded to ``chunk_rows`` so the jitted
+    kernel compiles once; kernels must be padding-safe (the paper's kernels
+    guard with bounds checks; ours use neutral pad values).
+    """
+    kernel = jax.jit(kernel)
+    combine = jax.jit(combine)
+
+    def put(chunk: np.ndarray) -> tuple[jax.Array, int]:
+        n = chunk.shape[0]
+        if n < chunk_rows:
+            pad = np.full(
+                (chunk_rows - n,) + chunk.shape[1:], pad_value, chunk.dtype
+            )
+            chunk = np.concatenate([chunk, pad])
+        return jax.device_put(chunk), n  # async H2D
+
+    acc = init
+    it = iter_chunks(data, chunk_rows)
+    try:
+        nxt = put(next(it))
+    except StopIteration:
+        return acc
+    while nxt is not None:
+        cur, _n = nxt
+        # Enqueue the next transfer BEFORE computing on the current chunk:
+        # device_put is asynchronous, so the copy overlaps the kernel.
+        try:
+            nxt = put(next(it))
+        except StopIteration:
+            nxt = None
+        acc = combine(acc, kernel(cur))
+    return acc
+
+
+def stream_kmeans(
+    points: np.ndarray,  # (n, f) host-resident, any size
+    centroids: jax.Array,  # (k, f) device-resident
+    *,
+    chunk_rows: int = 1 << 20,
+    use_pallas: bool = True,
+) -> jax.Array:
+    """One K-Means iteration over host-resident data of any size — the
+    paper's flagship spilling experiment (Figs. 10–12), end to end."""
+    from repro.kernels.kmeans import (
+        kmeans_assign_reduce,
+        kmeans_assign_reduce_ref,
+    )
+
+    assign = kmeans_assign_reduce if use_pallas else kmeans_assign_reduce_ref
+    k, f = centroids.shape
+
+    def kernel(chunk):
+        sums, counts = assign(chunk, centroids)
+        return jnp.concatenate([sums, counts[:, None]], axis=1)  # (k, f+1)
+
+    def combine(acc, part):
+        return acc + part
+
+    init = jnp.zeros((k, f + 1), jnp.float32)
+    agg = stream_map_reduce(
+        points, kernel, combine, init, chunk_rows=chunk_rows,
+    )
+    sums, counts = agg[:, :f], agg[:, f]
+    # Padding rows are all-zero points: they land in the centroid nearest
+    # the origin; subtract their count.
+    n = points.shape[0]
+    total_rows = -(-n // chunk_rows) * chunk_rows
+    n_pad = total_rows - n
+    if n_pad:
+        j = jnp.argmin(jnp.sum(centroids * centroids, axis=1))
+        counts = counts.at[j].add(-float(n_pad))
+    counts = jnp.maximum(counts, 1.0)
+    return (sums / counts[:, None]).astype(centroids.dtype)

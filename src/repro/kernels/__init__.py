@@ -1,0 +1,42 @@
+"""Pallas TPU kernels for the paper's benchmarks and the LM hot spots.
+
+Each subpackage follows the kernel/ops/ref triple:
+
+* ``kernel.py`` — ``pl.pallas_call`` with explicit BlockSpec VMEM tiling,
+* ``ops.py``    — jitted public wrapper (padding, interpret auto-select),
+* ``ref.py``    — pure-jnp oracle used by the allclose test sweeps.
+
+Paper benchmarks (§4.2): gemm, stencil2d (HotSpot), kmeans, black_scholes,
+spmv_ell, md5, nbody, correlator + the coclustering app kernel (§4.6).
+LM hot spots: flash_attention, decode_attention, rwkv6, rg_lru.
+"""
+
+from .black_scholes import black_scholes, black_scholes_ref
+from .coclustering import cluster_sums, cluster_sums_ref
+from .correlator import correlate, correlate_ref
+from .decode_attention import decode_attention, decode_attention_ref
+from .flash_attention import attention_ref, flash_attention
+from .gemm import gemm, gemm_ref
+from .kmeans import (
+    kmeans_assign_reduce,
+    kmeans_assign_reduce_ref,
+    kmeans_iteration,
+    kmeans_iteration_ref,
+)
+from .md5 import md5_search, md5_search_ref
+from .nbody import nbody_forces, nbody_forces_ref, nbody_step, nbody_step_ref
+from .rg_lru import rg_lru, rg_lru_ref
+from .rwkv6 import wkv6, wkv6_ref
+from .spmv_ell import spmv_ell, spmv_ell_ref
+from .stencil2d import hotspot_step, hotspot_step_ref
+
+__all__ = [
+    "attention_ref", "black_scholes", "black_scholes_ref", "cluster_sums",
+    "cluster_sums_ref", "correlate", "correlate_ref", "decode_attention",
+    "decode_attention_ref", "flash_attention", "gemm", "gemm_ref",
+    "hotspot_step", "hotspot_step_ref", "kmeans_assign_reduce",
+    "kmeans_assign_reduce_ref", "kmeans_iteration", "kmeans_iteration_ref",
+    "md5_search", "md5_search_ref", "nbody_forces", "nbody_forces_ref",
+    "nbody_step", "nbody_step_ref", "rg_lru", "rg_lru_ref", "spmv_ell",
+    "spmv_ell_ref", "wkv6", "wkv6_ref",
+]

@@ -1,0 +1,67 @@
+"""Black-Scholes Pallas TPU kernel.
+
+Pure VPU (vector unit) workload: one lane-wide block per grid step, no MXU.
+The CUDA sample's per-thread scalar pipeline becomes a (8, 128)-tiled
+elementwise program; arithmetic intensity is ~1 flop/byte so the kernel is
+HBM-bound by construction (this is what makes it the paper's worst spilling
+case, §4.3).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..common import cdiv
+
+
+def _bs_kernel(s_ref, k_ref, t_ref, call_ref, put_ref, *, riskfree, volatility):
+    s = s_ref[...]
+    k = k_ref[...]
+    t = t_ref[...]
+    sqrt_t = jnp.sqrt(t)
+    d1 = (jnp.log(s / k) + (riskfree + 0.5 * volatility * volatility) * t) / (
+        volatility * sqrt_t
+    )
+    d2 = d1 - volatility * sqrt_t
+    inv_sqrt2 = jnp.asarray(0.7071067811865476, s.dtype)
+    cnd1 = 0.5 * (1.0 + jax.lax.erf(d1 * inv_sqrt2))
+    cnd2 = 0.5 * (1.0 + jax.lax.erf(d2 * inv_sqrt2))
+    exp_rt = jnp.exp(-riskfree * t)
+    call_ref[...] = s * cnd1 - k * exp_rt * cnd2
+    put_ref[...] = k * exp_rt * (1.0 - cnd2) - s * (1.0 - cnd1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block", "interpret", "riskfree", "volatility")
+)
+def black_scholes_pallas(
+    price: jax.Array,
+    strike: jax.Array,
+    years: jax.Array,
+    *,
+    block: int = 8 * 128 * 64,  # 64 VREG tiles per step
+    riskfree: float = 0.02,
+    volatility: float = 0.30,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    (n,) = price.shape
+    block = min(block, n)
+    assert n % block == 0, "ops.py pads to a block multiple"
+    grid = (cdiv(n, block),)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    out = pl.pallas_call(
+        functools.partial(_bs_kernel, riskfree=riskfree, volatility=volatility),
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=(spec, spec),
+        out_shape=(
+            jax.ShapeDtypeStruct((n,), price.dtype),
+            jax.ShapeDtypeStruct((n,), price.dtype),
+        ),
+        interpret=interpret,
+    )(price, strike, years)
+    return out

@@ -1,0 +1,39 @@
+"""Oracle for the Black-Scholes benchmark (CUDA samples; paper §4.2).
+
+Computes European call/put option prices.  Embarrassingly parallel and
+memory-bound — the paper's canonical "spilling never pays" workload.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _cnd(x: jax.Array) -> jax.Array:
+    """Cumulative normal distribution via erf (matches the sample's
+    polynomial approximation to ~1e-7)."""
+    return 0.5 * (1.0 + jax.lax.erf(x / jnp.sqrt(2.0).astype(x.dtype)))
+
+
+def black_scholes_ref(
+    price: jax.Array,
+    strike: jax.Array,
+    years: jax.Array,
+    *,
+    riskfree: float = 0.02,
+    volatility: float = 0.30,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (call, put) prices."""
+    sqrt_t = jnp.sqrt(years)
+    d1 = (jnp.log(price / strike)
+          + (riskfree + 0.5 * volatility * volatility) * years) / (
+        volatility * sqrt_t
+    )
+    d2 = d1 - volatility * sqrt_t
+    cnd_d1 = _cnd(d1)
+    cnd_d2 = _cnd(d2)
+    exp_rt = jnp.exp(-riskfree * years)
+    call = price * cnd_d1 - strike * exp_rt * cnd_d2
+    put = strike * exp_rt * (1.0 - cnd_d2) - price * (1.0 - cnd_d1)
+    return call, put

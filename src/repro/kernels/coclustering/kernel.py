@@ -1,0 +1,63 @@
+"""Co-clustering cluster-sum Pallas TPU kernel.
+
+The hot kernel of CGC's iteration is the segmented reduction
+``CoCavg[r, c] += Z[i, j]`` for ``r = row_assign[i], c = col_assign[j]``.
+The CUDA version uses atomics into global memory; TPUs have none, so the
+reduction is reformulated as a double one-hot matmul per row-block —
+``R₁ᵀ (Z C₁)`` — which runs on the MXU and emits per-block partials that the
+Lightning ``reduce(+)`` annotation combines across devices.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..common import cdiv
+
+
+def _csums_kernel(z_ref, ra_ref, conehot_ref, out_ref, *, nrow_clusters: int):
+    z = z_ref[...]  # (block_n, m)
+    ra = ra_ref[...]  # (block_n,)
+    c1 = conehot_ref[...]  # (m, C)
+    zc = jnp.dot(z, c1, preferred_element_type=jnp.float32)  # (block_n, C)
+    r1 = (ra[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (ra.shape[0], nrow_clusters), 1)).astype(z.dtype)
+    out_ref[0, ...] = jnp.dot(
+        r1.T, zc, preferred_element_type=jnp.float32
+    ).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("nrow_clusters", "block_n", "interpret")
+)
+def cluster_sums_pallas(
+    z: jax.Array,  # (n, m)
+    row_assign: jax.Array,  # (n,)
+    col_onehot: jax.Array,  # (m, C)
+    *,
+    nrow_clusters: int,
+    block_n: int = 1024,
+    interpret: bool = False,
+) -> jax.Array:
+    n, m = z.shape
+    c = col_onehot.shape[1]
+    block_n = min(block_n, n)
+    assert n % block_n == 0, "ops.py pads rows"
+    blocks = cdiv(n, block_n)
+    partials = pl.pallas_call(
+        functools.partial(_csums_kernel, nrow_clusters=nrow_clusters),
+        grid=(blocks,),
+        in_specs=[
+            pl.BlockSpec((block_n, m), lambda i: (i, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((m, c), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, nrow_clusters, c), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((blocks, nrow_clusters, c), jnp.float32),
+        interpret=interpret,
+    )(z, row_assign, col_onehot)
+    return partials.sum(axis=0)

@@ -1,0 +1,42 @@
+"""Public wrapper for the co-clustering cluster-sum kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..common import interpret_default, round_up
+from .kernel import cluster_sums_pallas
+from .ref import cluster_sums_ref
+
+
+def cluster_sums(
+    z: jax.Array,
+    row_assign: jax.Array,
+    col_assign: jax.Array,
+    nrow_clusters: int,
+    ncol_clusters: int,
+    *,
+    block_n: int = 1024,
+    interpret: bool | None = None,
+    use_ref: bool = False,
+) -> jax.Array:
+    if use_ref:
+        return cluster_sums_ref(
+            z, row_assign, col_assign, nrow_clusters, ncol_clusters
+        )
+    interpret = interpret_default() if interpret is None else interpret
+    n, m = z.shape
+    blk = min(block_n, n)
+    target = round_up(n, blk)
+    if target != n:
+        pad = target - n
+        z = jnp.concatenate([z, jnp.zeros((pad, m), z.dtype)])
+        row_assign = jnp.concatenate(
+            [row_assign, jnp.zeros((pad,), row_assign.dtype)]
+        )  # pad rows are all-zero → contribute nothing
+    col_onehot = jax.nn.one_hot(col_assign, ncol_clusters, dtype=z.dtype)
+    return cluster_sums_pallas(
+        z, row_assign, col_onehot,
+        nrow_clusters=nrow_clusters, block_n=blk, interpret=interpret,
+    )

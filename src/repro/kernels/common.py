@@ -1,0 +1,64 @@
+"""Shared helpers for the Pallas TPU kernels.
+
+Every kernel in this package targets TPU (``pl.pallas_call`` with explicit
+``BlockSpec`` VMEM tiling, MXU-aligned block shapes) and validates on CPU via
+``interpret=True``, which executes the kernel body in Python.  The ``ops.py``
+wrapper of each kernel auto-selects interpret mode off-TPU so the whole test
+suite runs in this container.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.cache
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def interpret_default() -> bool:
+    """Pallas interpret mode: False on real TPU, True elsewhere (CPU CI)."""
+    return not on_tpu()
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(x: int, m: int) -> int:
+    return cdiv(x, m) * m
+
+
+def pad_to(x: jax.Array, axis: int, multiple: int, value=0) -> jax.Array:
+    """Pad ``axis`` up to a multiple (TPU tiles want 8/128-aligned dims)."""
+    size = x.shape[axis]
+    target = round_up(size, multiple)
+    if target == size:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - size)
+    return jnp.pad(x, pads, constant_values=value)
+
+
+# TPU tiling constants (v5e): MXU is 128x128, VREG lane width 128, sublane 8.
+LANE = 128
+SUBLANE = 8
+MXU = 128
+
+#: Hardware constants used by roofline estimates (TPU v5e).
+PEAK_FLOPS_BF16 = 197e12
+PEAK_HBM_BW = 819e9
+VMEM_BYTES = 128 * 1024 * 1024  # ~128 MiB VMEM per core on v5e
+
+
+def vmem_fits(*block_shapes_dtypes, budget: float = 0.7) -> bool:
+    """Sanity helper: do the given (shape, dtype) blocks fit in VMEM?"""
+    total = 0
+    for shape, dtype in block_shapes_dtypes:
+        total += math.prod(shape) * jnp.dtype(dtype).itemsize
+    return total <= budget * VMEM_BYTES

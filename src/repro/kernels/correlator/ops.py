@@ -1,0 +1,29 @@
+"""Public wrapper for the correlator kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..common import interpret_default, round_up
+from .kernel import correlate_pallas
+from .ref import correlate_ref
+
+
+def correlate(
+    samples: jax.Array,
+    *,
+    block_t: int = 512,
+    interpret: bool | None = None,
+    use_ref: bool = False,
+) -> jax.Array:
+    if use_ref:
+        return correlate_ref(samples)
+    interpret = interpret_default() if interpret is None else interpret
+    c, t, a, two = samples.shape
+    bt = min(block_t, t)
+    target = round_up(t, bt)
+    if target != t:
+        pad = jnp.zeros((c, target - t, a, two), samples.dtype)
+        samples = jnp.concatenate([samples, pad], axis=1)
+    return correlate_pallas(samples, block_t=bt, interpret=interpret)

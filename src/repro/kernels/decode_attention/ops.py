@@ -1,0 +1,50 @@
+"""Public wrapper for flash-decode attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..common import interpret_default, round_up
+from .kernel import decode_attention_pallas
+from .ref import decode_attention_ref
+
+
+def decode_attention(
+    q: jax.Array,  # (B, HQ, D)
+    k: jax.Array,  # (B, HKV, T, D)
+    v: jax.Array,  # (B, HKV, T, D)
+    *,
+    kv_len: jax.Array | int | None = None,
+    scale: float | None = None,
+    block_k: int = 512,
+    with_lse: bool = False,
+    interpret: bool | None = None,
+    use_ref: bool = False,
+):
+    """Single-token attention vs. KV cache; optionally returns the lse for
+    sequence-parallel partial combination (flash-decode)."""
+    b, hq, d = q.shape
+    t = k.shape[2]
+    if kv_len is None:
+        kv_len = jnp.full((b,), t, jnp.int32)
+    else:
+        kv_len = jnp.asarray(kv_len, jnp.int32)
+        if kv_len.ndim == 0:
+            kv_len = jnp.full((b,), kv_len, jnp.int32)
+    if use_ref:
+        return decode_attention_ref(
+            q, k, v, kv_len=kv_len, scale=scale, with_lse=with_lse
+        )
+    interpret = interpret_default() if interpret is None else interpret
+    bk = min(block_k, t)
+    t_pad = round_up(t, bk)
+    if t_pad != t:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, t_pad - t), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, t_pad - t), (0, 0)))
+    out, lse = decode_attention_pallas(
+        q, k, v, kv_len, scale=scale, block_k=bk, interpret=interpret
+    )
+    if with_lse:
+        return out, lse
+    return out

@@ -1,0 +1,38 @@
+"""Oracle for single-token decode attention against a KV cache."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(
+    q: jax.Array,  # (B, HQ, D) one new token per sequence
+    k: jax.Array,  # (B, HKV, T, D)
+    v: jax.Array,  # (B, HKV, T, D)
+    *,
+    kv_len: jax.Array | int | None = None,  # valid cache length per batch
+    scale: float | None = None,
+    with_lse: bool = False,
+):
+    b, hq, d = q.shape
+    _, hkv, t, _ = k.shape
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhd,bhtd->bht", q, kk).astype(jnp.float32) * scale
+    if kv_len is not None:
+        kv_len = jnp.asarray(kv_len)
+        if kv_len.ndim == 0:
+            kv_len = jnp.full((b,), kv_len)
+        mask = jnp.arange(t)[None, None, :] < kv_len[:, None, None]
+        logits = jnp.where(mask, logits, -jnp.inf)
+    m = logits.max(axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    l = p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bht,bhtd->bhd", (p / l).astype(q.dtype), vv)
+    if with_lse:
+        lse = (m + jnp.log(l)).squeeze(-1)  # (B, HQ)
+        return out, lse
+    return out

@@ -1,0 +1,138 @@
+"""FlashAttention Pallas TPU kernel (GQA/MQA, causal, sliding window).
+
+TPU adaptation of the CUDA flash-attention family: the online-softmax
+recurrence is identical, but tiling targets VMEM + the MXU — q blocks of
+(block_q, head_dim) stay resident across the inner kv grid axis; running
+max/denominator/accumulator live in VMEM scratch (CUDA keeps them in
+registers).  GQA is expressed in the BlockSpec index map: the kv block
+loaded for query head ``h`` is head ``h // group`` of the kv tensor, so MQA
+(kv=1) broadcasts one head to all query heads with zero copies.
+
+Used by every full-attention architecture config for ``train_4k`` and
+``prefill_32k``; ``long_500k`` is served by the SSM/hybrid kernels instead.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..common import cdiv
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, scale: float, block_q: int, block_k: int, causal: bool,
+    window: int | None, kv_steps: int, q_offset: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]  # (block_q, d)
+    k = k_ref[0, 0]  # (block_k, d)
+    v = v_ref[0, 0]  # (block_k, d)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    q_pos = q_offset + qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0
+    )
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1
+    )
+    mask = jnp.ones_like(s, dtype=jnp.bool_)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    # Renormalize previous accumulator.
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_cur
+
+    @pl.when(ki == kv_steps - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "scale", "block_q", "block_k", "interpret",
+        "q_offset",
+    ),
+)
+def flash_attention_pallas(
+    q: jax.Array,  # (B, HQ, S, D)
+    k: jax.Array,  # (B, HKV, T, D)
+    v: jax.Array,  # (B, HKV, T, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, hq, s, d = q.shape
+    _, hkv, t, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    block_q = min(block_q, s)
+    block_k = min(block_k, t)
+    assert s % block_q == 0 and t % block_k == 0, "ops.py pads seq"
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    kv_steps = cdiv(t, block_k)
+    grid = (b, hq, cdiv(s, block_q), kv_steps)
+
+    return pl.pallas_call(
+        functools.partial(
+            _flash_kernel,
+            scale=scale, block_q=block_q, block_k=block_k, causal=causal,
+            window=window, kv_steps=kv_steps, q_offset=q_offset,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec(
+                (1, 1, block_k, d),
+                lambda b_, h, i, j: (b_, h // group, j, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, block_k, d),
+                lambda b_, h, i, j: (b_, h // group, j, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, d), lambda b_, h, i, j: (b_, h, i, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hq, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

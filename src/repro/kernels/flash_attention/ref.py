@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for multi-head attention (GQA/MQA, causal, windowed)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,  # (B, HQ, S, D)
+    k: jax.Array,  # (B, HKV, T, D)
+    v: jax.Array,  # (B, HKV, T, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,  # local attention window (incl. self)
+    scale: float | None = None,
+    q_offset: int = 0,  # absolute position of q[0] (for decode)
+) -> jax.Array:
+    b, hq, s, d = q.shape
+    _, hkv, t, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhsd,bhtd->bhst", q, kk).astype(jnp.float32) * scale
+
+    q_pos = jnp.arange(s) + q_offset
+    k_pos = jnp.arange(t)
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        mask &= q_pos[:, None] - k_pos[None, :] < window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhst,bhtd->bhsd", probs, vv)

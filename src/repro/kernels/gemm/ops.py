@@ -1,0 +1,40 @@
+"""Jitted public wrapper for the GEMM kernel (pads to block multiples)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..common import interpret_default, pad_to, round_up
+from .kernel import gemm_pallas
+from .ref import gemm_ref
+
+
+def gemm(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block_m: int = 256,
+    block_n: int = 256,
+    block_k: int = 256,
+    out_dtype=None,
+    interpret: bool | None = None,
+    use_ref: bool = False,
+) -> jax.Array:
+    """C = A @ B via the Pallas TPU kernel (or the jnp oracle)."""
+    if use_ref:
+        return gemm_ref(a, b, out_dtype=out_dtype)
+    interpret = interpret_default() if interpret is None else interpret
+    m, k = a.shape
+    _, n = b.shape
+    bm, bn, bk = (min(block_m, m), min(block_n, n), min(block_k, k))
+    # Shrink blocks to fit small problems, then pad up to block multiples.
+    a_p = pad_to(pad_to(a, 0, bm), 1, bk)
+    b_p = pad_to(pad_to(b, 0, bk), 1, bn)
+    out = gemm_pallas(
+        a_p, b_p,
+        block_m=bm, block_n=bn, block_k=bk,
+        out_dtype=out_dtype or a.dtype,
+        interpret=interpret,
+    )
+    return out[:m, :n]

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the GEMM benchmark (paper §4.2, Volkov-style)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gemm_ref(a: jax.Array, b: jax.Array,
+             out_dtype=None) -> jax.Array:
+    """C = A @ B with f32 accumulation."""
+    out_dtype = out_dtype or a.dtype
+    return jnp.matmul(
+        a, b, preferred_element_type=jnp.float32
+    ).astype(out_dtype)

@@ -1,0 +1,73 @@
+"""K-Means assignment + partial-reduction Pallas TPU kernel.
+
+TPU adaptation of Rodinia's CUDA K-Means: the distance computation is
+reformulated as a matmul (``|p - c|² = |p|² - 2 p·cᵀ + |c|²``) so the MXU
+does the heavy lifting, and the per-block partial sums use a one-hot matmul
+(again MXU) instead of CUDA's shared-memory atomics — TPUs have no atomics,
+so the reduce(+) semantics of the annotation is realized as
+partials-then-tree exactly like Lightning's planner does.
+
+Outputs are *per-block partials*: sums (blocks, k, f) and counts (blocks, k).
+The caller (ops/launch) reduces over the leading axis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..common import cdiv
+
+
+def _kmeans_kernel(p_ref, c_ref, sums_ref, counts_ref):
+    p = p_ref[...]  # (block, f)
+    c = c_ref[...]  # (k, f)
+    d2 = (
+        jnp.sum(p * p, axis=1, keepdims=True)
+        - 2.0 * jnp.dot(p, c.T, preferred_element_type=jnp.float32)
+        + jnp.sum(c * c, axis=1)[None, :]
+    )
+    assign = jnp.argmin(d2, axis=1)  # (block,)
+    k = c.shape[0]
+    onehot = (assign[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (p.shape[0], k), 1)).astype(p.dtype)
+    sums_ref[0, ...] = jnp.dot(
+        onehot.T, p, preferred_element_type=jnp.float32
+    ).astype(sums_ref.dtype)
+    counts_ref[0, ...] = jnp.sum(onehot, axis=0).astype(counts_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def kmeans_pallas(
+    points: jax.Array,  # (n, f)
+    centroids: jax.Array,  # (k, f)
+    *,
+    block: int = 4096,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    n, f = points.shape
+    k, f2 = centroids.shape
+    assert f == f2
+    block = min(block, n)
+    assert n % block == 0, "ops.py pads points"
+    blocks = cdiv(n, block)
+    return pl.pallas_call(
+        _kmeans_kernel,
+        grid=(blocks,),
+        in_specs=[
+            pl.BlockSpec((block, f), lambda i: (i, 0)),
+            pl.BlockSpec((k, f), lambda i: (0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, k, f), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((blocks, k, f), jnp.float32),
+            jax.ShapeDtypeStruct((blocks, k), jnp.float32),
+        ),
+        interpret=interpret,
+    )(points, centroids)

@@ -1,0 +1,38 @@
+"""Oracle for the K-Means benchmark (Rodinia; paper §4.2).
+
+Each iteration: assign every record to its nearest centroid, then recompute
+centroids as per-cluster means.  The paper highlights that Lightning moves
+the centre recalculation onto the GPU via ``reduce(+)`` annotations — here
+the assignment kernel emits per-block partial sums/counts and the reduction
+is the planner's hierarchical tree (``psum`` on a mesh).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def kmeans_assign_reduce_ref(
+    points: jax.Array,  # (n, f)
+    centroids: jax.Array,  # (k, f)
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (sums (k, f), counts (k,)) of points per nearest centroid."""
+    d2 = (
+        jnp.sum(points * points, axis=1, keepdims=True)
+        - 2.0 * points @ centroids.T
+        + jnp.sum(centroids * centroids, axis=1)[None, :]
+    )  # (n, k)
+    assign = jnp.argmin(d2, axis=1)
+    onehot = jax.nn.one_hot(assign, centroids.shape[0], dtype=points.dtype)
+    sums = onehot.T @ points
+    counts = onehot.sum(axis=0)
+    return sums, counts
+
+
+def kmeans_iteration_ref(
+    points: jax.Array, centroids: jax.Array
+) -> jax.Array:
+    sums, counts = kmeans_assign_reduce_ref(points, centroids)
+    counts = jnp.maximum(counts, 1.0)
+    return sums / counts[:, None]

@@ -1,0 +1,26 @@
+"""Public wrapper for the MD5 key-search kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..common import interpret_default
+from .kernel import md5_search_pallas
+from .ref import md5_search_ref
+
+
+def md5_search(
+    n: int,
+    target: tuple[int, int, int, int],
+    *,
+    block: int = 8 * 128 * 8,
+    interpret: bool | None = None,
+    use_ref: bool = False,
+) -> jax.Array:
+    """Smallest key index in [0, n) whose MD5 matches ``target`` (else n)."""
+    if use_ref:
+        return md5_search_ref(n, target)
+    interpret = interpret_default() if interpret is None else interpret
+    tgt = jnp.asarray(target, jnp.uint32)
+    return md5_search_pallas(n, tgt, block=block, interpret=interpret)

@@ -1,0 +1,108 @@
+"""Oracle for the MD5 benchmark (SHOC; paper §4.2).
+
+SHOC's MD5Hash generates *n* candidate keys, hashes each with MD5, and
+searches for a target digest (``reduce(min)`` over matching indices).  We
+hash 8-byte messages — two little-endian uint32 words (the key index split
+into two lanes) — which occupy exactly one padded 512-bit MD5 block, so the
+full 64-round compression function runs per message.  Pure compute, zero
+data: the paper's purest compute-scaling benchmark.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Per-round shift amounts and sine constants (RFC 1321).
+_S = (
+    [7, 12, 17, 22] * 4
+    + [5, 9, 14, 20] * 4
+    + [4, 11, 16, 23] * 4
+    + [6, 10, 15, 21] * 4
+)
+_K = [
+    0xD76AA478, 0xE8C7B756, 0x242070DB, 0xC1BDCEEE,
+    0xF57C0FAF, 0x4787C62A, 0xA8304613, 0xFD469501,
+    0x698098D8, 0x8B44F7AF, 0xFFFF5BB1, 0x895CD7BE,
+    0x6B901122, 0xFD987193, 0xA679438E, 0x49B40821,
+    0xF61E2562, 0xC040B340, 0x265E5A51, 0xE9B6C7AA,
+    0xD62F105D, 0x02441453, 0xD8A1E681, 0xE7D3FBC8,
+    0x21E1CDE6, 0xC33707D6, 0xF4D50D87, 0x455A14ED,
+    0xA9E3E905, 0xFCEFA3F8, 0x676F02D9, 0x8D2A4C8A,
+    0xFFFA3942, 0x8771F681, 0x6D9D6122, 0xFDE5380C,
+    0xA4BEEA44, 0x4BDECFA9, 0xF6BB4B60, 0xBEBFBC70,
+    0x289B7EC6, 0xEAA127FA, 0xD4EF3085, 0x04881D05,
+    0xD9D4D039, 0xE6DB99E5, 0x1FA27CF8, 0xC4AC5665,
+    0xF4292244, 0x432AFF97, 0xAB9423A7, 0xFC93A039,
+    0x655B59C3, 0x8F0CCC92, 0xFFEFF47D, 0x85845DD1,
+    0x6FA87E4F, 0xFE2CE6E0, 0xA3014314, 0x4E0811A1,
+    0xF7537E82, 0xBD3AF235, 0x2AD7D2BB, 0xEB86D391,
+]
+_INIT = (0x67452301, 0xEFCDAB89, 0x98BADCFE, 0x10325476)
+
+
+def _rotl(x: jax.Array, s: int) -> jax.Array:
+    return (x << jnp.uint32(s)) | (x >> jnp.uint32(32 - s))
+
+
+def md5_u32x2(w0: jax.Array, w1: jax.Array) -> tuple[jax.Array, ...]:
+    """MD5 digest (a, b, c, d as uint32) of the 8-byte message [w0, w1].
+
+    Message block: w0, w1, 0x80 padding word, zeros, bit length (64) in
+    words 14–15.
+    """
+    w0 = w0.astype(jnp.uint32)
+    w1 = w1.astype(jnp.uint32)
+    zero = jnp.zeros_like(w0)
+    m = [w0, w1, jnp.full_like(w0, 0x80)] + [zero] * 11 + [
+        jnp.full_like(w0, 64), zero,
+    ]
+    a = jnp.full_like(w0, _INIT[0])
+    b = jnp.full_like(w0, _INIT[1])
+    c = jnp.full_like(w0, _INIT[2])
+    d = jnp.full_like(w0, _INIT[3])
+
+    for i in range(64):
+        if i < 16:
+            f = (b & c) | (~b & d)
+            g = i
+        elif i < 32:
+            f = (d & b) | (~d & c)
+            g = (5 * i + 1) % 16
+        elif i < 48:
+            f = b ^ c ^ d
+            g = (3 * i + 5) % 16
+        else:
+            f = c ^ (b | ~d)
+            g = (7 * i) % 16
+        tmp = d
+        d = c
+        c = b
+        add = a + f + jnp.uint32(_K[i]) + m[g]
+        b = b + _rotl(add, _S[i])
+        a = tmp
+    return (
+        a + jnp.uint32(_INIT[0]),
+        b + jnp.uint32(_INIT[1]),
+        c + jnp.uint32(_INIT[2]),
+        d + jnp.uint32(_INIT[3]),
+    )
+
+
+def md5_search_ref(
+    n: int, target: tuple[int, int, int, int], key_offset: int = 0
+) -> jax.Array:
+    """Hash keys [offset, offset+n) and return the smallest matching index
+    (or n if none matches) — SHOC's FindKeyWithDigest semantics."""
+    idx = jnp.arange(n, dtype=jnp.uint32) + jnp.uint32(key_offset)
+    w0 = idx
+    w1 = idx ^ jnp.uint32(0x9E3779B9)  # second word derived from the key
+    a, b, c, d = md5_u32x2(w0, w1)
+    hit = (
+        (a == jnp.uint32(target[0]))
+        & (b == jnp.uint32(target[1]))
+        & (c == jnp.uint32(target[2]))
+        & (d == jnp.uint32(target[3]))
+    )
+    return jnp.min(jnp.where(hit, jnp.arange(n, dtype=jnp.int32),
+                             jnp.int32(n)))

@@ -1,0 +1,46 @@
+"""Public wrapper for the RG-LRU kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..common import interpret_default, round_up
+from .kernel import rg_lru_pallas
+from .ref import rg_lru_ref
+
+
+def rg_lru(
+    log_a: jax.Array,  # (B, T, D)
+    gx: jax.Array,  # (B, T, D)
+    h0: jax.Array | None = None,  # (B, D)
+    *,
+    block_t: int = 256,
+    block_d: int = 512,
+    return_state: bool = False,
+    interpret: bool | None = None,
+    use_ref: bool = False,
+):
+    if use_ref:
+        return rg_lru_ref(log_a, gx, h0, return_state=return_state)
+    interpret = interpret_default() if interpret is None else interpret
+    b, t, d = log_a.shape
+    h0 = (
+        h0.astype(jnp.float32)
+        if h0 is not None
+        else jnp.zeros((b, d), jnp.float32)
+    )
+    bt, bd = min(block_t, t), min(block_d, d)
+    t_pad, d_pad = round_up(t, bt), round_up(d, bd)
+    la, x = log_a, gx
+    if t_pad != t or d_pad != d:
+        la = jnp.pad(la, ((0, 0), (0, t_pad - t), (0, d_pad - d)))
+        x = jnp.pad(x, ((0, 0), (0, t_pad - t), (0, d_pad - d)))
+        h0 = jnp.pad(h0, ((0, 0), (0, d_pad - d)))
+    out, h_final = rg_lru_pallas(
+        la, x, h0, block_t=bt, block_d=bd, interpret=interpret
+    )
+    out = out[:, :t, :d]
+    if return_state:
+        return out, h_final[:, :d]
+    return out

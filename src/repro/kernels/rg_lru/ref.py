@@ -1,0 +1,43 @@
+"""Oracle for the RG-LRU gated linear recurrence (Griffin/RecurrentGemma,
+arXiv:2402.19427).
+
+    a_t = exp(c · log(a) ⊙ r_t)           (gated per-channel decay, r_t∈(0,1))
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+We take the already-gated inputs: ``log_a_t = c · log(a) ⊙ r_t`` (≤ 0) and
+the gated input ``gx_t = i_t ⊙ x_t``.  The recurrence is a first-order
+linear scan per channel — associative, so the oracle uses
+``jax.lax.associative_scan`` (which also documents the O(log T) parallel
+form the Pallas kernel trades against its streaming sequential form).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rg_lru_ref(
+    log_a: jax.Array,  # (B, T, D) ≤ 0
+    gx: jax.Array,  # (B, T, D) gated input
+    h0: jax.Array | None = None,  # (B, D)
+    return_state: bool = False,
+):
+    a = jnp.exp(log_a.astype(jnp.float32))
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 0.0))
+    x = beta * gx.astype(jnp.float32)
+    if h0 is not None:
+        # Fold the initial state in as a virtual step: h_t includes a
+        # prefix-product of decays applied to h0.
+        x = x.at[:, 0, :].add(a[:, 0, :] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, x1 = c1
+        a2, x2 = c2
+        return a1 * a2, a2 * x1 + x2
+
+    a_c, h = jax.lax.associative_scan(combine, (a, x), axis=1)
+    h = h.astype(gx.dtype)
+    if return_state:
+        return h, h[:, -1, :]
+    return h

@@ -1,0 +1,54 @@
+"""Public wrapper for the WKV6 kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..common import interpret_default, round_up
+from .kernel import wkv6_pallas
+from .ref import wkv6_ref
+
+
+def wkv6(
+    r: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    u: jax.Array,
+    initial_state: jax.Array | None = None,
+    *,
+    block_t: int = 256,
+    return_state: bool = False,
+    interpret: bool | None = None,
+    use_ref: bool = False,
+):
+    if use_ref:
+        return wkv6_ref(r, k, v, w, u, initial_state,
+                        return_state=return_state)
+    interpret = interpret_default() if interpret is None else interpret
+    b, h, t, dk = r.shape
+    dv = v.shape[-1]
+    s0 = (
+        initial_state.astype(jnp.float32)
+        if initial_state is not None
+        else jnp.zeros((b, h, dk, dv), jnp.float32)
+    )
+    bt = min(block_t, t)
+    t_pad = round_up(t, bt)
+    if t_pad != t:
+        pad = t_pad - t
+        # Pad with decay=1, k=0 → state passes through unchanged; outputs in
+        # the pad region are garbage and sliced off.
+        r = jnp.pad(r, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        w = jnp.pad(w, ((0, 0), (0, 0), (0, pad), (0, 0)),
+                    constant_values=1.0)
+    out, s_final = wkv6_pallas(
+        r, k, v, w, u, s0, block_t=bt, interpret=interpret
+    )
+    out = out[:, :, :t, :]
+    if return_state:
+        return out, s_final
+    return out

@@ -1,0 +1,53 @@
+"""Oracle for the RWKV-6 (Finch) WKV recurrence [arXiv:2404.05892].
+
+Per head with key dim K and value dim V, state S ∈ R^{K×V}:
+
+    out_t = r_tᵀ (S_t + diag(u) k_t v_tᵀ)            (read with bonus)
+    S_{t+1} = diag(w_t) S_t + k_t v_tᵀ               (data-dependent decay)
+
+where w_t = exp(-exp(log_w_t)) is the per-channel decay in (0, 1).
+Shapes: r/k/w (B, H, T, K), v (B, H, T, V), u (H, K) → out (B, H, T, V).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(
+    r: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,  # decay in (0, 1): already exp(-exp(·))
+    u: jax.Array,  # (H, K) bonus
+    initial_state: jax.Array | None = None,  # (B, H, K, V)
+    return_state: bool = False,
+):
+    b, h, t, dk = r.shape
+    dv = v.shape[-1]
+    s0 = (
+        initial_state
+        if initial_state is not None
+        else jnp.zeros((b, h, dk, dv), jnp.float32)
+    )
+
+    def step(s, inputs):
+        r_t, k_t, v_t, w_t = inputs  # (B, H, K) ×3, (B, H, V)
+        kv = k_t[..., :, None] * v_t[..., None, :]  # (B, H, K, V)
+        read = s + u[None, :, :, None] * kv
+        out_t = jnp.einsum("bhk,bhkv->bhv", r_t, read.astype(r_t.dtype))
+        s_new = w_t[..., :, None] * s + kv
+        return s_new, out_t
+
+    xs = (
+        jnp.moveaxis(r, 2, 0),
+        jnp.moveaxis(k, 2, 0),
+        jnp.moveaxis(v, 2, 0),
+        jnp.moveaxis(w, 2, 0),
+    )
+    s_final, outs = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    out = jnp.moveaxis(outs, 0, 2)  # (B, H, T, V)
+    if return_state:
+        return out, s_final
+    return out

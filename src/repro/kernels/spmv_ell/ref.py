@@ -1,0 +1,25 @@
+"""Oracle for the SpMV benchmark (SHOC; paper §4.2), ELLPACK format.
+
+``y[i] = Σ_j data[i, j] * x[cols[i, j]]`` with per-row padded nonzeros.
+The paper notes SpMV's unstructured reads cannot be expressed precisely by
+Lightning annotations — the access region is *overestimated* as the whole
+vector (``read x[:]``), which is exactly the GATHER pattern in our planner.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spmv_ell_ref(
+    data: jax.Array,  # (rows, max_nnz) f32
+    cols: jax.Array,  # (rows, max_nnz) int32; padded entries must point at 0
+    x: jax.Array,  # (n,)
+    pad_mask: jax.Array | None = None,  # (rows, max_nnz) 1.0 valid / 0.0 pad
+) -> jax.Array:
+    gathered = x[cols]  # (rows, max_nnz)
+    terms = data * gathered
+    if pad_mask is not None:
+        terms = terms * pad_mask
+    return terms.sum(axis=1)

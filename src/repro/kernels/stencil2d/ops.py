@@ -1,0 +1,40 @@
+"""Public wrapper for the HotSpot stencil kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..common import interpret_default, round_up
+from .kernel import hotspot_pallas
+from .ref import DEFAULTS, hotspot_step_ref
+
+
+def hotspot_step(
+    temp: jax.Array,
+    power: jax.Array,
+    *,
+    block_rows: int = 256,
+    interpret: bool | None = None,
+    use_ref: bool = False,
+    **consts,
+) -> jax.Array:
+    """One HotSpot step.  Rows are padded to a block multiple with
+    edge-replication so the clamp boundary condition is preserved."""
+    if use_ref:
+        return hotspot_step_ref(temp, power, **{**DEFAULTS, **consts})
+    interpret = interpret_default() if interpret is None else interpret
+    rows, cols = temp.shape
+    br = min(block_rows, rows)
+    target = round_up(rows, br)
+    if target != rows:
+        pad = target - rows
+        temp_p = jnp.concatenate([temp, jnp.tile(temp[-1:, :], (pad, 1))], 0)
+        power_p = jnp.concatenate([power, jnp.zeros((pad, cols), power.dtype)], 0)
+    else:
+        temp_p, power_p = temp, power
+    out = hotspot_pallas(
+        temp_p, power_p, block_rows=br, interpret=interpret,
+        **{**DEFAULTS, **consts},
+    )
+    return out[:rows, :]

@@ -1,0 +1,45 @@
+"""Oracle for the HotSpot thermal stencil (Rodinia; paper §4.2).
+
+One step of the 5-point thermal update on an n×n grid:
+
+    T'[i,j] = T[i,j] + step/cap * ( (T[i,j-1] + T[i,j+1] - 2 T[i,j]) / Rx
+                                  + (T[i-1,j] + T[i+1,j] - 2 T[i,j]) / Ry
+                                  + (Tamb     -             T[i,j]) / Rz
+                                  + P[i,j] )
+
+Boundary cells clamp to their own value for out-of-grid neighbours
+(zero-flux boundary, matching Rodinia's guarded loads).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Rodinia-like constants folded to scalars.
+DEFAULTS = dict(sdc=0.3412, rx=1.0 / 0.2, ry=1.0 / 0.2, rz=1.0 / 4.75,
+                amb=80.0)
+
+
+def hotspot_step_ref(
+    temp: jax.Array,
+    power: jax.Array,
+    *,
+    sdc: float = DEFAULTS["sdc"],
+    rx: float = DEFAULTS["rx"],
+    ry: float = DEFAULTS["ry"],
+    rz: float = DEFAULTS["rz"],
+    amb: float = DEFAULTS["amb"],
+) -> jax.Array:
+    t = temp
+    up = jnp.concatenate([t[:1, :], t[:-1, :]], axis=0)
+    down = jnp.concatenate([t[1:, :], t[-1:, :]], axis=0)
+    left = jnp.concatenate([t[:, :1], t[:, :-1]], axis=1)
+    right = jnp.concatenate([t[:, 1:], t[:, -1:]], axis=1)
+    delta = sdc * (
+        (left + right - 2.0 * t) * rx
+        + (up + down - 2.0 * t) * ry
+        + (amb - t) * rz
+        + power
+    )
+    return t + delta

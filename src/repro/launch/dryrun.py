@@ -1,0 +1,411 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ruff: noqa: E402  — the two lines above MUST precede any jax import:
+# jax locks the device count at first initialization, and the dry-run needs
+# 512 host placeholder devices to build the production meshes.
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this driver builds the real jitted step (full train step with
+optimizer, or serve prefill/decode step), lowers it with ShapeDtypeStruct
+inputs (no allocation), compiles it for the production mesh, and records:
+
+* ``compiled.memory_analysis()``  — proves the cell fits per-device HBM;
+* ``compiled.cost_analysis()``    — FLOPs / bytes for §Roofline;
+* collective traffic parsed from the optimized HLO — the §Roofline third
+  term (all-gather/all-reduce/reduce-scatter/all-to-all/collective-permute
+  operand bytes).
+
+Artifacts land in ``artifacts/dryrun/<arch>__<shape>__<mesh>__<flavor>.json``
+and are consumed by ``benchmarks/roofline_table.py`` and EXPERIMENTS.md.
+
+Usage:
+    python -m repro.launch.dryrun --arch phi3-mini-3.8b --shape train_4k
+    python -m repro.launch.dryrun --all                  # every cell, 1 pod
+    python -m repro.launch.dryrun --all --multi-pod      # 2 pods = 512 chips
+    python -m repro.launch.dryrun --list                 # show cells + skips
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, get_config
+from repro.configs.shapes import SHAPES, SHAPE_NAMES, applicable, input_specs
+from repro.dist.sharding import ShardingRules, tree_specs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.rules import rules_for
+from repro.models import api as model_api
+from repro.train.train_loop import init_train_state, make_train_step, train_state_specs
+from repro.utils.hlo_analysis import collective_stats, flops_and_bytes
+from repro.utils.roofline import roofline
+
+ARTIFACT_DIR = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "artifacts", "dryrun"
+)
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _abstract(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+def _probe_cfg(cfg, k: int):
+    """Reduced-depth, unrolled copy for exact cost accounting.
+
+    XLA's cost_analysis counts while-loop bodies ONCE (verified: a scanned
+    8-matmul loop reports 1 matmul of FLOPs).  The probes unroll k ∈ {1, 2}
+    layers; metric(L) = base + L·body is then fit exactly and extrapolated
+    to the real depth."""
+    if cfg.family == "hybrid":
+        tail = cfg.n_layers % cfg.attn_every
+        return cfg.scaled(
+            n_layers=cfg.attn_every * k + tail, scan_unroll=True
+        )
+    if cfg.family == "encdec":
+        return cfg.scaled(n_layers=k, n_enc_layers=k, scan_unroll=True)
+    return cfg.scaled(n_layers=k, scan_unroll=True)
+
+
+def _trip_count(cfg) -> int:
+    if cfg.family == "hybrid":
+        return cfg.n_layers // cfg.attn_every
+    return cfg.n_layers
+
+
+def _cell_metrics(cfg, shape_name: str, mesh, flavor: str, *,
+                  want_hlo: bool = True, microbatches: int = 1):
+    """Lower + compile one (cfg × shape) and extract metrics."""
+    spec = SHAPES[shape_name]
+    rules = rules_for(
+        cfg, mesh, flavor,
+        global_batch=spec.global_batch,
+        shard_seq=(spec.kind == "decode" and flavor == "tp"
+                   and cfg.family not in ("rwkv", "hybrid")),
+    )
+    batch_shapes = input_specs(cfg, shape_name)
+    params_shapes = _abstract(
+        lambda: model_api.init_params(jax.random.key(0), cfg)
+    )
+    p_axes = model_api.params_logical_axes(cfg)
+    p_specs = tree_specs(rules, p_axes)
+
+    if spec.kind == "train":
+        step = make_train_step(cfg, rules, mesh, donate=False,
+                               microbatches=microbatches)
+        state_shapes = _abstract(
+            lambda: init_train_state(jax.random.key(0), cfg)
+        )
+        lowered = step.lower(state_shapes, batch_shapes)
+        tokens = spec.global_batch * spec.seq_len
+        model_flops = model_api.model_flops_for(
+            cfg, "train", spec.global_batch, spec.seq_len
+        )
+    else:
+        # VLM prefill prepends n_patches embeddings: the cache must hold them.
+        cache_len = spec.seq_len + (
+            cfg.n_patches if cfg.family == "vlm" else 0
+        )
+        state_shapes = _abstract(
+            lambda: model_api.init_decode_state(
+                cfg, spec.global_batch, cache_len
+            )
+        )
+        s_axes = model_api.state_logical_axes(cfg)
+        s_specs = tree_specs(rules, s_axes)
+        batch_spec_tree = {
+            "tokens": rules.spec(("batch", "seq")),
+        }
+        if "frames" in batch_shapes:
+            batch_spec_tree["frames"] = rules.spec(
+                ("batch", "frames", "d_model")
+            )
+        if "patch_embeds" in batch_shapes:
+            batch_spec_tree["patch_embeds"] = rules.spec(
+                ("batch", None, "d_model")
+            )
+
+        if spec.kind == "prefill":
+            fn = jax.jit(
+                lambda p, b, st: model_api.prefill(p, b, cfg, st, rules),
+                in_shardings=(
+                    _named(mesh, p_specs),
+                    _named(mesh, batch_spec_tree),
+                    _named(mesh, s_specs),
+                ),
+            )
+            lowered = fn.lower(params_shapes, batch_shapes, state_shapes)
+            tokens = spec.global_batch * spec.seq_len
+            model_flops = model_api.model_flops_for(
+                cfg, "prefill", spec.global_batch, spec.seq_len
+            )
+        else:  # decode
+            tok_shape = {"tokens": batch_shapes["tokens"]}
+            # Donate the cache: without it the functional cache update
+            # copies the entire KV cache every token (§Perf hillclimb C:
+            # dominated decode bytes before donation).
+            donate = () if getattr(cfg, "no_donate", False) else (2,)
+            fn = jax.jit(
+                lambda p, t, st: model_api.decode_step(
+                    p, t["tokens"], cfg, st, rules
+                ),
+                in_shardings=(
+                    _named(mesh, p_specs),
+                    _named(mesh, {"tokens": rules.spec(("batch", None))}),
+                    _named(mesh, s_specs),
+                ),
+                donate_argnums=donate,
+            )
+            lowered = fn.lower(params_shapes, tok_shape, state_shapes)
+            tokens = spec.global_batch  # one new token per sequence
+            model_flops = model_api.model_flops_for(
+                cfg, "decode", spec.global_batch, spec.seq_len
+            )
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    ca = compiled.cost_analysis() or {}
+    flops, bytes_acc = flops_and_bytes(ca)
+    coll_bytes = 0
+    coll_summary = {}
+    mem = {}
+    if want_hlo:
+        try:
+            hlo = compiled.as_text()
+        except Exception:
+            hlo = lowered.as_text()
+        coll = collective_stats(hlo)
+        coll_bytes = coll.total_operand_bytes
+        coll_summary = coll.summary()
+        ma = None
+        try:
+            ma = compiled.memory_analysis()
+        except Exception:
+            pass
+        if ma is not None:
+            for field in (
+                "argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "alias_size_in_bytes",
+                "generated_code_size_in_bytes",
+            ):
+                v = getattr(ma, field, None)
+                if v is not None:
+                    mem[field] = int(v)
+    else:
+        try:
+            coll = collective_stats(compiled.as_text())
+            coll_bytes = coll.total_operand_bytes
+            coll_summary = coll.summary()
+        except Exception:
+            pass
+
+    return {
+        "flops": flops,
+        "bytes_accessed": bytes_acc,
+        "collective_bytes": coll_bytes,
+        "collectives": coll_summary,
+        "memory_analysis": mem,
+        "compile_s": round(t_compile, 2),
+        "tokens": tokens,
+        "model_flops": model_flops,
+    }
+
+
+def lower_cell(arch: str, shape_name: str, mesh, flavor: str,
+               overrides: dict | None = None):
+    """Full cell: scanned compile (memory/compile proof) + two unrolled
+    cost probes that recover exact per-layer FLOPs/bytes/collectives."""
+    cfg = get_config(arch)
+    microbatches = 1
+    if overrides:
+        overrides = dict(overrides)
+        microbatches = overrides.pop("microbatches", 1)
+        cfg = cfg.scaled(**overrides)
+    spec = SHAPES[shape_name]
+    chips = mesh.size
+
+    full = _cell_metrics(cfg, shape_name, mesh, flavor, want_hlo=True,
+                         microbatches=microbatches)
+
+    # Cost probes: metric(L) = base + L·body, exact via unrolled k=1,2.
+    probes = {}
+    corrected = {}
+    try:
+        m1 = _cell_metrics(_probe_cfg(cfg, 1), shape_name, mesh, flavor,
+                           want_hlo=False, microbatches=microbatches)
+        m2 = _cell_metrics(_probe_cfg(cfg, 2), shape_name, mesh, flavor,
+                           want_hlo=False, microbatches=microbatches)
+        L = _trip_count(cfg)
+        for key in ("flops", "bytes_accessed", "collective_bytes"):
+            body = max(0.0, m2[key] - m1[key])
+            base = max(0.0, m1[key] - body)
+            corrected[key] = base + L * body
+        probes = {
+            "k1": {k: m1[k] for k in
+                   ("flops", "bytes_accessed", "collective_bytes")},
+            "k2": {k: m2[k] for k in
+                   ("flops", "bytes_accessed", "collective_bytes")},
+            "trip_count": L,
+        }
+    except Exception as e:  # pragma: no cover - probe failure is non-fatal
+        probes = {"error": repr(e)}
+        corrected = {
+            "flops": full["flops"],
+            "bytes_accessed": full["bytes_accessed"],
+            "collective_bytes": full["collective_bytes"],
+        }
+
+    terms = roofline(
+        corrected["flops"], corrected["bytes_accessed"],
+        corrected["collective_bytes"],
+        chips=chips, per_device=True,
+        model_flops=full["model_flops"] / chips,
+    )
+
+    return {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": spec.kind,
+        "flavor": flavor,
+        "mesh": {
+            "axes": list(mesh.axis_names),
+            "shape": list(mesh.devices.shape),
+            "chips": chips,
+        },
+        "compile_s": full["compile_s"],
+        "cost_analysis_raw": {
+            "flops": full["flops"],
+            "bytes_accessed": full["bytes_accessed"],
+            "collective_bytes": full["collective_bytes"],
+            "note": "scanned HLO: while bodies counted once by XLA",
+        },
+        "cost_probes": probes,
+        "collectives": full["collectives"],
+        "memory_analysis": full["memory_analysis"],
+        "roofline": terms.to_dict(),
+        "tokens": full["tokens"],
+    }
+
+
+def cell_id(arch, shape, multi_pod, flavor):
+    mesh_name = "pod2" if multi_pod else "pod1"
+    return f"{arch}__{shape}__{mesh_name}__{flavor}"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=SHAPE_NAMES)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--flavor", default="tp", choices=("tp", "dp"))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument(
+        "--override", action="append", default=[],
+        help="cfg field override key=value (e.g. remat_policy=dots, "
+             "kv_fused=false) — for §Perf hillclimb iterations",
+    )
+    ap.add_argument("--tag", default="",
+                    help="artifact filename suffix for hillclimb variants")
+    args = ap.parse_args()
+
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        if v.lower() in ("true", "false"):
+            overrides[k] = v.lower() == "true"
+        else:
+            try:
+                overrides[k] = int(v)
+            except ValueError:
+                try:
+                    overrides[k] = float(v)
+                except ValueError:
+                    overrides[k] = v
+
+    out_dir = args.out or os.path.abspath(ARTIFACT_DIR)
+    os.makedirs(out_dir, exist_ok=True)
+
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            for shape in SHAPE_NAMES:
+                cells.append((arch, shape))
+    elif args.arch and args.shape:
+        cells.append((args.arch, args.shape))
+    else:
+        args.list = True
+
+    if args.list:
+        print(f"{'arch':28s} {'shape':12s} status")
+        for arch in ARCHS:
+            cfg = get_config(arch)
+            for shape in SHAPE_NAMES:
+                ok, why = applicable(cfg, shape)
+                print(f"{arch:28s} {shape:12s} "
+                      f"{'RUN' if ok else 'SKIP: ' + why}")
+        return
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))} "
+          f"({mesh.size} chips), flavor={args.flavor}")
+
+    failures = []
+    for arch, shape in cells:
+        cfg = get_config(arch)
+        ok, why = applicable(cfg, shape)
+        cid = cell_id(arch, shape, args.multi_pod, args.flavor)
+        if args.tag:
+            cid += "__" + args.tag
+        path = os.path.join(out_dir, cid + ".json")
+        if not ok:
+            with open(path, "w") as f:
+                json.dump({"arch": arch, "shape": shape,
+                           "skipped": True, "reason": why}, f, indent=2)
+            print(f"SKIP {cid}: {why}")
+            continue
+        if args.skip_existing and os.path.exists(path):
+            print(f"HAVE {cid}")
+            continue
+        try:
+            art = lower_cell(arch, shape, mesh, args.flavor,
+                             overrides=overrides)
+            with open(path, "w") as f:
+                json.dump(art, f, indent=2)
+            r = art["roofline"]
+            print(
+                f"PASS {cid}: compile={art['compile_s']}s "
+                f"flops/dev={r['flops']:.3e} bytes/dev={r['bytes_accessed']:.3e} "
+                f"coll/dev={r['collective_bytes']:.3e} "
+                f"dominant={r['dominant']} frac={r['roofline_fraction']:.3f}"
+            )
+        except Exception as e:
+            failures.append((cid, repr(e)))
+            print(f"FAIL {cid}: {e}")
+            traceback.print_exc()
+
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for cid, err in failures:
+            print(f"  {cid}: {err[:200]}")
+        raise SystemExit(1)
+    print("\nALL CELLS PASSED")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+touches no jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+initialization, and everything else must see the real single device.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """The assigned production mesh: one pod = (16, 16) = 256 chips with
+    axes (data, model); two pods = (2, 16, 16) = 512 chips with axes
+    (pod, data, model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
+    )
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
+    return jax.make_mesh(
+        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
+    )
+
+
+def data_axes_of(mesh: Mesh) -> tuple[str, ...]:
+    """Axes used for data parallelism: everything except 'model'."""
+    return tuple(a for a in mesh.axis_names if a != "model")

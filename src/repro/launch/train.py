@@ -1,0 +1,150 @@
+"""End-to-end training driver.
+
+Runs real training on whatever devices exist (CPU smoke scale here, the
+production mesh on a pod): config → data pipeline → jitted train step →
+checkpoint manager → supervisor loop with heartbeat/straggler monitoring.
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch gemma-2b --smoke --steps 50 --batch 8 --seq 128
+
+``--smoke`` selects the reduced config (CPU-sized); omit it on real
+hardware to train the full architecture.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import CheckpointManager
+from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.data.pipeline import DataConfig, TokenStream
+from repro.dist.fault import HeartbeatMonitor, StragglerMonitor, TrainSupervisor
+from repro.train.train_loop import init_train_state, make_train_step
+
+
+def run_training(
+    arch: str,
+    *,
+    smoke: bool = True,
+    steps: int = 50,
+    batch: int = 8,
+    seq: int = 128,
+    microbatches: int = 1,
+    ckpt_dir: str | None = None,
+    ckpt_every: int = 20,
+    seed: int = 0,
+    log_every: int = 10,
+    fail_at_step: int | None = None,  # fault-injection for tests
+) -> dict:
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    data = DataConfig(vocab=cfg.vocab, seq_len=seq, global_batch=batch,
+                      seed=seed)
+    stream = TokenStream(data)
+    step_fn = make_train_step(cfg, microbatches=microbatches)
+    ckpt = CheckpointManager(ckpt_dir, keep=2) if ckpt_dir else None
+    monitor = HeartbeatMonitor(num_hosts=1)
+    stragglers = StragglerMonitor(monitor)
+    losses: list[float] = []
+
+    def make_batch(step: int) -> dict:
+        b = stream.batch_at(step)
+        out = {"tokens": jnp.asarray(b["tokens"])}
+        if cfg.family == "encdec":
+            rng = np.random.default_rng(seed + step)
+            out["frames"] = jnp.asarray(
+                rng.standard_normal(
+                    (batch, cfg.enc_frames, cfg.d_model), np.float32
+                ),
+                cfg.jdtype,
+            )
+        if cfg.family == "vlm":
+            rng = np.random.default_rng(seed + step)
+            out["patch_embeds"] = jnp.asarray(
+                rng.standard_normal(
+                    (batch, cfg.n_patches, cfg.d_model), np.float32
+                ),
+                cfg.jdtype,
+            )
+        return out
+
+    armed = {"fail": fail_at_step is not None}
+
+    def run_from(start: int) -> int:
+        state = init_train_state(jax.random.key(seed), cfg)
+        if ckpt is not None and ckpt.latest_step() is not None:
+            state, meta = ckpt.restore(state)
+            start = meta["step"]
+        step = start
+        while step < steps:
+            t0 = time.time()
+            batch_data = make_batch(step)
+            state, metrics = step_fn(state, batch_data)
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            step += 1
+            monitor.beat(0, time.time() - t0)
+            stragglers.evaluate()
+            if armed["fail"] and step == fail_at_step:
+                armed["fail"] = False  # one-shot fault injection
+                raise RuntimeError(f"injected worker failure at {step}")
+            if ckpt is not None and step % ckpt_every == 0:
+                ckpt.save(step, state)
+            if step % log_every == 0:
+                print(f"step {step:5d} loss {loss:.4f} "
+                      f"({time.time() - t0:.2f}s/step)")
+        if ckpt is not None:
+            ckpt.save(steps, state, blocking=True)
+        return step
+
+    if ckpt is not None:
+        sup = TrainSupervisor(ckpt)
+        last = sup.run(run_from, steps)
+        events = [dataclass_event(e) for e in sup.events]
+    else:
+        last = run_from(0)
+        events = []
+    if ckpt is not None:
+        ckpt.wait()
+    return {
+        "arch": cfg.name,
+        "steps": last,
+        "first_loss": losses[0] if losses else None,
+        "last_loss": losses[-1] if losses else None,
+        "losses": losses,
+        "events": events,
+    }
+
+
+def dataclass_event(e) -> dict:
+    return {"kind": e.kind, "step": e.step, "detail": e.detail}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS, required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    result = run_training(
+        args.arch, smoke=args.smoke, steps=args.steps, batch=args.batch,
+        seq=args.seq, microbatches=args.microbatches,
+        ckpt_dir=args.ckpt_dir, seed=args.seed,
+    )
+    print(json.dumps({k: v for k, v in result.items() if k != "losses"},
+                     indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Model zoo: the assigned architectures built on the Lightning substrate.
+
+Families: dense decoder LMs (GQA/MQA transformers), MoE, RWKV-6 (attention
+free), RecurrentGemma (RG-LRU hybrid), Whisper (enc-dec, conv stub), and
+InternVL (VLM backbone, patch-embed stub).  All forwards are scan-over-layers
+for O(1)-in-depth HLO, with sharding constraints from
+:mod:`repro.dist.sharding` rules derived from Lightning annotations.
+"""
+
+from .config import ModelConfig
+from .api import init_params, train_loss, prefill, decode_step, param_count
+
+__all__ = [
+    "ModelConfig", "init_params", "train_loss", "prefill", "decode_step",
+    "param_count",
+]

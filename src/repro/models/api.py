@@ -1,0 +1,252 @@
+"""Family-dispatched model API used by train/serve/dryrun drivers.
+
+Every family implements: ``init_params``, ``train_loss``, ``prefill``,
+``decode_step`` and exposes logical-axis trees for params and decode state so
+shardings (and checkpoint resharding) are derived uniformly.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import ShardingRules
+
+from . import encdec, kvcache, moe, rglru, rwkv, transformer
+from .config import ModelConfig
+
+_TRANSFORMER_FAMILIES = ("dense", "vlm")
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    if cfg.family in _TRANSFORMER_FAMILIES:
+        return transformer.init_params(key, cfg)
+    if cfg.family == "moe":
+        return moe.init_params(key, cfg)
+    if cfg.family == "rwkv":
+        return rwkv.init_params(key, cfg)
+    if cfg.family == "hybrid":
+        return rglru.init_params(key, cfg)
+    if cfg.family == "encdec":
+        return encdec.init_params(key, cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def params_logical_axes(cfg: ModelConfig) -> dict:
+    if cfg.family in _TRANSFORMER_FAMILIES:
+        return transformer.params_logical_axes(cfg)
+    if cfg.family == "moe":
+        return moe.params_logical_axes(cfg)
+    if cfg.family == "rwkv":
+        return rwkv.params_logical_axes(cfg)
+    if cfg.family == "hybrid":
+        return rglru.params_logical_axes(cfg)
+    if cfg.family == "encdec":
+        return encdec.params_logical_axes(cfg)
+    raise ValueError(cfg.family)
+
+
+def param_count(params: Any) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def param_shapes(cfg: ModelConfig) -> Any:
+    """ShapeDtypeStructs of the parameter tree without allocating."""
+    return jax.eval_shape(
+        lambda k: init_params(k, cfg), jax.random.key(0)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Training
+# ---------------------------------------------------------------------------
+
+
+def train_loss(
+    params: dict,
+    batch: dict,
+    cfg: ModelConfig,
+    rules: ShardingRules | None = None,
+) -> jax.Array:
+    if cfg.family in _TRANSFORMER_FAMILIES:
+        return transformer.train_loss(params, batch, cfg, rules)
+    if cfg.family == "moe":
+        return moe.train_loss(params, batch, cfg, rules)
+    if cfg.family == "rwkv":
+        return rwkv.train_loss(params, batch, cfg, rules)
+    if cfg.family == "hybrid":
+        return rglru.train_loss(params, batch, cfg, rules)
+    if cfg.family == "encdec":
+        return encdec.train_loss(params, batch, cfg, rules)
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    if cfg.family in _TRANSFORMER_FAMILIES or cfg.family == "moe":
+        return kvcache.init_cache(cfg, batch, max_len)
+    if cfg.family == "rwkv":
+        return rwkv.init_state(cfg, batch)
+    if cfg.family == "hybrid":
+        return rglru.init_state(cfg, batch)
+    if cfg.family == "encdec":
+        return encdec.init_cache(cfg, batch, max_len)
+    raise ValueError(cfg.family)
+
+
+def state_logical_axes(cfg: ModelConfig) -> dict:
+    if cfg.family in _TRANSFORMER_FAMILIES or cfg.family == "moe":
+        return kvcache.cache_logical_axes(cfg)
+    if cfg.family == "rwkv":
+        return rwkv.state_logical_axes(cfg)
+    if cfg.family == "hybrid":
+        return rglru.state_logical_axes(cfg)
+    if cfg.family == "encdec":
+        return encdec.cache_logical_axes(cfg)
+    raise ValueError(cfg.family)
+
+
+def prefill(
+    params: dict,
+    batch: dict,
+    cfg: ModelConfig,
+    state: dict,
+    rules: ShardingRules | None = None,
+):
+    """Process the prompt; returns (last-token logits, updated state)."""
+    tokens = batch["tokens"]
+    if cfg.family in _TRANSFORMER_FAMILIES:
+        logits, cache = transformer.forward(
+            params, tokens, cfg, rules, mode="prefill", cache=state,
+            extra_embeds=batch.get("patch_embeds"),
+        )
+        return logits[:, -1:, :], cache
+    if cfg.family == "moe":
+        logits, cache, _ = moe.forward(
+            params, tokens, cfg, rules, mode="prefill", cache=state
+        )
+        return logits[:, -1:, :], cache
+    if cfg.family == "rwkv":
+        logits, st = rwkv.forward(
+            params, tokens, cfg, rules, mode="prefill", state=state
+        )
+        return logits[:, -1:, :], st
+    if cfg.family == "hybrid":
+        logits, st = rglru.forward(
+            params, tokens, cfg, rules, mode="prefill", state=state
+        )
+        return logits[:, -1:, :], st
+    if cfg.family == "encdec":
+        return encdec.prefill(
+            params, tokens, batch["frames"], cfg, state, rules
+        )
+    raise ValueError(cfg.family)
+
+
+def decode_step(
+    params: dict,
+    token: jax.Array,  # (B, 1) int32
+    cfg: ModelConfig,
+    state: dict,
+    rules: ShardingRules | None = None,
+):
+    """One new token against the cache; returns (logits (B,1,V), state)."""
+    if cfg.family in _TRANSFORMER_FAMILIES:
+        return transformer.forward(
+            params, token, cfg, rules, mode="decode", cache=state
+        )
+    if cfg.family == "moe":
+        logits, cache, _ = moe.forward(
+            params, token, cfg, rules, mode="decode", cache=state
+        )
+        return logits, cache
+    if cfg.family == "rwkv":
+        return rwkv.forward(
+            params, token, cfg, rules, mode="decode", state=state
+        )
+    if cfg.family == "hybrid":
+        return rglru.forward(
+            params, token, cfg, rules, mode="decode", state=state
+        )
+    if cfg.family == "encdec":
+        return encdec.decode_step(params, token, cfg, state, rules)
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# Model FLOPs (for roofline: 6·N·D dense / 6·N_active·D MoE)
+# ---------------------------------------------------------------------------
+
+
+def model_flops_per_token(cfg: ModelConfig, n_params: int | None = None) -> float:
+    """6 × (active) params — the standard training-FLOPs estimate."""
+    n = n_params if n_params is not None else active_param_estimate(cfg)
+    return 6.0 * n
+
+
+def model_flops_for(cfg: ModelConfig, kind: str, batch: int,
+                    seq: int) -> float:
+    """MODEL_FLOPS for one step of a (kind × shape) cell.
+
+    Enc-dec splits params between the encoder (charged per frame) and the
+    decoder (charged per token) — charging decoder-length tokens against
+    the whole model overestimates whisper prefill ~27× (EXPERIMENTS.md §).
+    """
+    mult = {"train": 6.0, "prefill": 2.0, "decode": 2.0}[kind]
+    if cfg.family == "encdec":
+        d = cfg.d_model
+        gates = 3 if cfg.activation in ("swiglu", "geglu") else 2
+        enc_p = cfg.n_enc_layers * (4 * d * d + gates * d * cfg.d_ff)
+        dec_p = cfg.n_layers * (8 * d * d + gates * d * cfg.d_ff) \
+            + cfg.vocab * d
+        if kind == "train" or kind == "prefill":
+            enc_tokens = batch * cfg.enc_frames
+            dec_tokens = batch * seq
+        else:  # decode: one token, cross-attn reads cached enc KV
+            enc_tokens = 0
+            dec_tokens = batch
+        return mult * (enc_p * enc_tokens + dec_p * dec_tokens)
+    tokens = batch * seq if kind != "decode" else batch
+    return mult * active_param_estimate(cfg) * tokens
+
+
+def active_param_estimate(cfg: ModelConfig) -> float:
+    """Parameter count from config (active params for MoE)."""
+    d, L, V = cfg.d_model, cfg.n_layers, cfg.vocab
+    embed = V * d * (1 if cfg.tie_embeddings else 2)
+    attn = L * (d * cfg.q_dim + 2 * d * cfg.kv_dim + cfg.q_dim * d)
+    if cfg.family == "moe":
+        gates = 3 if cfg.activation in ("swiglu", "geglu") else 2
+        mlp = L * (cfg.top_k * gates * d * cfg.d_ff + d * cfg.n_experts)
+    elif cfg.family == "rwkv":
+        attn = L * (6 * d * d)  # r,k,v,g,o + lora
+        mlp = L * (2 * d * cfg.d_ff + d * d)
+    elif cfg.family == "hybrid":
+        g, tail = rglru.n_groups(cfg)
+        rec = (2 * g + tail) * (2 * d * d + 2 * d * d + d * d)  # in,gates,out
+        att = g * (d * cfg.q_dim + 2 * d * cfg.kv_dim + cfg.q_dim * d)
+        gates = 3 if cfg.activation in ("swiglu", "geglu") else 2
+        mlp = L * gates * d * cfg.d_ff
+        return embed + rec + att + mlp
+    else:
+        gates = 3 if cfg.activation in ("swiglu", "geglu") else 2
+        mlp = L * gates * d * cfg.d_ff
+    total = embed + attn + mlp
+    if cfg.family == "encdec":
+        total += cfg.n_enc_layers * (
+            4 * d * d + (3 if cfg.activation != "gelu" else 2) * d * cfg.d_ff
+        )
+        total += L * 4 * d * d  # cross-attention
+    return total

@@ -1,0 +1,197 @@
+"""Attention implementations for the model zoo.
+
+Three interchangeable implementations selected by ``cfg.attention_impl``:
+
+* ``pallas`` — the FlashAttention Pallas TPU kernel
+  (:mod:`repro.kernels.flash_attention`), the production TPU hot path;
+* ``xla``    — a scan-over-kv-blocks online-softmax implementation in plain
+  jnp: numerically the same algorithm, compiles on any backend, keeps peak
+  memory at O(block) (used for the CPU dry-run so ``memory_analysis`` is
+  meaningful at 32k context);
+* ``naive``  — materialized-logits oracle (small tests only).
+
+Decode-side attention (one token vs. cache) likewise has pallas / xla paths,
+both emitting LSE so sequence-sharded caches combine via psum (flash-decode).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention import decode_attention as pallas_decode
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention import attention_ref, flash_attention
+
+NEG_INF = -1e30
+
+
+def xla_flash_attention(
+    q: jax.Array,  # (B, HQ, S, D)
+    k: jax.Array,  # (B, HKV, T, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    q_offset: int = 0,
+    block_k: int = 512,
+) -> jax.Array:
+    """Online-softmax attention via lax.scan over kv blocks (flash in XLA)."""
+    b, hq, s, d = q.shape
+    _, hkv, t, _ = k.shape
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d**0.5)
+    block_k = min(block_k, t)
+    if t % block_k:
+        pad = block_k - t % block_k
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        t = t + pad
+    nblk = t // block_k
+
+    qf = q.astype(jnp.float32) * scale
+    q_pos = q_offset + jnp.arange(s)
+
+    kb = k.reshape(b, hkv, nblk, block_k, d).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(b, hkv, nblk, block_k, d).transpose(2, 0, 1, 3, 4)
+
+    def step(carry, inputs):
+        m_prev, l_prev, acc = carry
+        ki, k_blk, v_blk = inputs  # (B, HKV, bk, D)
+        k_rep = jnp.repeat(k_blk, group, axis=1)  # (B, HQ, bk, D)
+        v_rep = jnp.repeat(v_blk, group, axis=1)
+        s_ij = jnp.einsum(
+            "bhsd,bhtd->bhst", qf, k_rep.astype(jnp.float32)
+        )  # (B, HQ, S, bk)
+        k_pos = ki * block_k + jnp.arange(block_k)
+        mask = jnp.ones((s, block_k), bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window is not None:
+            mask &= (q_pos[:, None] - k_pos[None, :]) < window
+        s_ij = jnp.where(mask[None, None], s_ij, NEG_INF)
+        m_cur = jnp.maximum(m_prev, s_ij.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s_ij - m_cur[..., None])
+        l_cur = l_prev * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhst,bhtd->bhsd", p, v_rep.astype(jnp.float32)
+        )
+        return (m_cur, l_cur, acc), None
+
+    m0 = jnp.full((b, hq, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hq, s), jnp.float32)
+    acc0 = jnp.zeros((b, hq, s, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, acc0),
+        (jnp.arange(nblk), kb, vb),
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+def multihead_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    impl: str = "xla",
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    if impl == "pallas":
+        return flash_attention(
+            q, k, v, causal=causal, window=window, scale=scale,
+            q_offset=q_offset,
+        )
+    if impl == "xla":
+        return xla_flash_attention(
+            q, k, v, causal=causal, window=window, scale=scale,
+            q_offset=q_offset,
+        )
+    return attention_ref(
+        q, k, v, causal=causal, window=window, scale=scale, q_offset=q_offset
+    )
+
+
+def decode_attention(
+    q: jax.Array,  # (B, HQ, D)
+    k_cache: jax.Array,  # (B, HKV, T, D)
+    v_cache: jax.Array,
+    kv_len: jax.Array,  # (B,) valid lengths
+    *,
+    impl: str = "xla",
+    scale: float | None = None,
+    with_lse: bool = False,
+) -> Any:
+    if impl == "pallas":
+        return pallas_decode(
+            q, k_cache, v_cache, kv_len=kv_len, scale=scale, with_lse=with_lse
+        )
+    return decode_attention_ref(
+        q, k_cache, v_cache, kv_len=kv_len, scale=scale, with_lse=with_lse
+    )
+
+
+def decode_attention_quant(
+    q: jax.Array,  # (B, HQ, D)
+    k_q: jax.Array,  # (B, HKV, T, D) int8
+    k_s: jax.Array,  # (B, HKV, T) f32 per-token scales
+    v_q: jax.Array,  # (B, HKV, T, D) int8
+    v_s: jax.Array,  # (B, HKV, T) f32
+    kv_len: jax.Array,  # (B,)
+    *,
+    scale: float | None = None,
+) -> jax.Array:
+    """Decode attention directly on the int8 cache (§Perf hillclimb C).
+
+    The naive path dequantizes the whole cache to bf16 first — 3× the HBM
+    traffic of the int8 payload (read int8, write bf16, read bf16).  Since
+    quantization is per-token symmetric, the scales factor OUT of both dots:
+
+        logits[t] = k_s[t] · (q · k_q[t])        (int8 operand feeds the MXU)
+        out       = Σ_t (p[t] · v_s[t]) · v_q[t]
+
+    so the cache is read exactly once, in int8.
+    """
+    b, hq, d = q.shape
+    _, hkv, t, _ = k_q.shape
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d**0.5)
+    qg = q.reshape(b, hkv, group, d)
+
+    raw = jnp.einsum(
+        "bkgd,bktd->bkgt", qg, k_q.astype(q.dtype),
+        preferred_element_type=jnp.float32,
+    )
+    logits = raw * k_s[:, :, None, :] * scale  # (B, KV, G, T)
+    mask = jnp.arange(t)[None, None, None, :] < kv_len[:, None, None, None]
+    logits = jnp.where(mask, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    pv = (p * v_s[:, :, None, :]).astype(q.dtype)  # fold value scales in
+    out = jnp.einsum(
+        "bkgt,bktd->bkgd", pv, v_q.astype(q.dtype),
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, hq, d).astype(q.dtype)
+
+
+def combine_decode_partials(
+    out: jax.Array,  # (B, H, D) local partial
+    lse: jax.Array,  # (B, H) local log-sum-exp
+    axis_name: str,
+) -> jax.Array:
+    """Flash-decode combine across a sequence-sharded cache axis: weight each
+    device's partial output by softmax of its lse (psum over the mesh axis).
+    """
+    m = jax.lax.pmax(lse, axis_name)
+    w = jnp.exp(lse - m)  # (B, H)
+    num = jax.lax.psum(out.astype(jnp.float32) * w[..., None], axis_name)
+    den = jax.lax.psum(w, axis_name)
+    return (num / den[..., None]).astype(out.dtype)

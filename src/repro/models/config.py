@@ -1,0 +1,94 @@
+"""Model configuration for all assigned architecture families."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | rwkv | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    vocab: int
+    n_kv_heads: int | None = None
+    head_dim: int | None = None
+    activation: str = "swiglu"  # swiglu | geglu | gelu
+    norm: str = "rmsnorm"  # rmsnorm | layernorm
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    tie_embeddings: bool = False
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    expert_pad_to: int = 0  # pad dispatch buffer to a multiple (EP when
+    # n_experts doesn't divide the model axis; §Perf hillclimb A)
+    moe_flat_dispatch: bool = False  # ablation: original batch-flattened
+    # dispatch with a global buffer (§Perf-A baseline)
+    # Hybrid (RecurrentGemma): every `attn_every`-th block is local attention
+    window: int | None = None
+    attn_every: int = 0  # 0 = no hybrid pattern; 3 = (rec, rec, attn)
+    conv_width: int = 4
+    # RWKV
+    wkv_head_dim: int = 64
+    # Enc-dec (Whisper)
+    n_enc_layers: int = 0
+    enc_frames: int = 1500
+    # VLM
+    n_patches: int = 0
+    # Numerics / execution
+    dtype: str = "bfloat16"
+    remat: bool = True
+    remat_policy: str = "nothing"  # nothing | dots  (§Perf hillclimb B)
+    attention_impl: str = "xla"  # xla | pallas | naive
+    kv_quant: bool = False  # int8 KV cache (serving)
+    kv_fused: bool = True  # factor dequant scales out of the cache dots
+    # (§Perf hillclimb C; False = naive dequantize-then-attend baseline)
+    no_donate: bool = False  # disable cache donation (hillclimb C baseline)
+    scan_unroll: bool = False  # unroll layer scans (dry-run cost probes:
+    # XLA's cost_analysis counts while-loop bodies once; unrolled probes
+    # recover exact per-layer FLOPs/bytes — see launch/dryrun.py)
+
+    # -- derived -------------------------------------------------------------
+
+    def __post_init__(self):
+        if self.n_kv_heads is None:
+            object.__setattr__(self, "n_kv_heads", self.n_heads)
+        if self.head_dim is None:
+            object.__setattr__(self, "head_dim",
+                               self.d_model // self.n_heads)
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "rwkv"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic sequence handling (SSM / hybrid-local-attention)."""
+        return self.family in ("rwkv", "hybrid")
+
+    def scaled(self, **kw) -> "ModelConfig":
+        """A reduced copy for smoke tests (same family/topology)."""
+        return dataclasses.replace(self, **kw)
+
+    def unroll_of(self, length: int) -> int:
+        """Scan unroll factor for a layer scan of ``length`` iterations."""
+        return length if self.scan_unroll else 1

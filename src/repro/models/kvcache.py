@@ -1,0 +1,125 @@
+"""KV cache for serving: bf16 or int8-quantized, layer-stacked for scan.
+
+Layout: ``k``/``v`` are (L, B, KV_heads, T_max, head_dim); ``pos`` (B,) is
+the number of valid tokens per sequence.  The int8 path stores per-(token,
+head) symmetric scales — the memory fix for ``decode_32k`` on qwen1.5-32b
+(bf16 KV would need 21.5 GB/chip on the 256-chip mesh; int8 halves it).
+
+The cache's kv_seq axis may be sharded over the ``model`` mesh axis
+(sequence-parallel KV): attention over a sharded axis lowers to partial
+softmax + all-reduce — exactly the flash-decode combine the Pallas decode
+kernel exposes via its LSE output.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+Cache = dict[str, Any]
+
+
+def init_cache(
+    cfg: ModelConfig,
+    batch: int,
+    max_len: int,
+    n_layers: int | None = None,
+) -> Cache:
+    L = n_layers if n_layers is not None else cfg.n_layers
+    shape = (L, batch, cfg.n_kv_heads, max_len, cfg.head_dim)
+    if cfg.kv_quant:
+        return {
+            "k_q": jnp.zeros(shape, jnp.int8),
+            "v_q": jnp.zeros(shape, jnp.int8),
+            "k_s": jnp.zeros(shape[:-1], jnp.float32),
+            "v_s": jnp.zeros(shape[:-1], jnp.float32),
+            "pos": jnp.zeros((batch,), jnp.int32),
+        }
+    return {
+        "k": jnp.zeros(shape, cfg.jdtype),
+        "v": jnp.zeros(shape, cfg.jdtype),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def cache_logical_axes(cfg: ModelConfig) -> Cache:
+    kv = ("layers", "batch", "kv_heads", "kv_seq", "head_dim")
+    sc = ("layers", "batch", "kv_heads", "kv_seq")
+    if cfg.kv_quant:
+        return {"k_q": kv, "v_q": kv, "k_s": sc, "v_s": sc,
+                "pos": ("batch",)}
+    return {"k": kv, "v": kv, "pos": ("batch",)}
+
+
+def _quantize(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric int8 per-(…, token) over head_dim."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax / 127.0, 1e-8)
+    q = jnp.clip(
+        jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127
+    ).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def layer_slice(cache: Cache) -> Cache:
+    """The per-layer pytree scanned over (everything except ``pos``)."""
+    return {k: v for k, v in cache.items() if k != "pos"}
+
+
+def update_layer(
+    cfg: ModelConfig,
+    cache_l: Cache,  # per-layer slice: (B, KV, T, D) leaves
+    k_new: jax.Array,  # (B, KV, S, D)
+    v_new: jax.Array,
+    pos: jax.Array,  # (B,) per-row write offsets (slots may diverge)
+) -> Cache:
+    def write(buf, val):
+        # Per-batch-row dynamic update (continuous batching: each slot has
+        # its own position).
+        return jax.vmap(
+            lambda b, v, p: jax.lax.dynamic_update_slice_in_dim(
+                b, v, p, axis=1
+            )
+        )(buf, val.astype(buf.dtype), pos)
+
+    def write3(buf, val):  # (B, KV, T) scale buffers
+        return jax.vmap(
+            lambda b, v, p: jax.lax.dynamic_update_slice_in_dim(
+                b, v, p, axis=1
+            )
+        )(buf, val.astype(buf.dtype), pos)
+
+    out = dict(cache_l)
+    if cfg.kv_quant:
+        kq, ks = _quantize(k_new)
+        vq, vs = _quantize(v_new)
+        out["k_q"] = write(cache_l["k_q"], kq)
+        out["v_q"] = write(cache_l["v_q"], vq)
+        out["k_s"] = write3(cache_l["k_s"], ks)
+        out["v_s"] = write3(cache_l["v_s"], vs)
+    else:
+        out["k"] = write(cache_l["k"], k_new)
+        out["v"] = write(cache_l["v"], v_new)
+    return out
+
+
+def read_layer(cfg: ModelConfig, cache_l: Cache) -> tuple[jax.Array, jax.Array]:
+    if cfg.kv_quant:
+        k = _dequantize(cache_l["k_q"], cache_l["k_s"], cfg.jdtype)
+        v = _dequantize(cache_l["v_q"], cache_l["v_s"], cfg.jdtype)
+        return k, v
+    return cache_l["k"], cache_l["v"]
+
+
+def advance(cache: Cache, n: int | jax.Array) -> Cache:
+    out = dict(cache)
+    out["pos"] = cache["pos"] + n
+    return out

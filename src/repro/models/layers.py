@@ -1,0 +1,159 @@
+"""Shared layer primitives: norms, RoPE, MLP variants, losses, init."""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import ShardingRules, constrain
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def normal_init(key, shape: Sequence[int], scale: float, dtype) -> jax.Array:
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def fan_in_init(key, shape: Sequence[int], dtype) -> jax.Array:
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    return normal_init(key, shape, 1.0 / math.sqrt(fan_in), dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(dtype)
+
+
+def apply_norm(x: jax.Array, params: dict, kind: str) -> jax.Array:
+    if kind == "rmsnorm":
+        return rms_norm(x, params["scale"])
+    return layer_norm(x, params["scale"], params["bias"])
+
+
+def norm_init(d: int, kind: str, dtype) -> dict:
+    if kind == "rmsnorm":
+        return {"scale": jnp.zeros((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D) or (..., S, D); positions: (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (d/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, d/2)
+    if x.ndim == angles.ndim + 1:  # head axis present
+        angles = angles[..., None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d_model: int, d_ff: int, activation: str, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_up": fan_in_init(k1, (d_model, d_ff), dtype),
+        "w_down": fan_in_init(k2, (d_ff, d_model), dtype),
+    }
+    if activation in ("swiglu", "geglu"):
+        p["w_gate"] = fan_in_init(k3, (d_model, d_ff), dtype)
+    return p
+
+
+def mlp_apply(params: dict, x: jax.Array, activation: str,
+              rules: ShardingRules | None = None) -> jax.Array:
+    up = x @ params["w_up"]
+    if activation == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"]) * up
+    elif activation == "geglu":
+        h = jax.nn.gelu(x @ params["w_gate"], approximate=True) * up
+    else:  # gelu
+        h = jax.nn.gelu(up, approximate=True)
+    h = constrain(h, rules, ("batch", "seq", "d_ff"))
+    return h @ params["w_down"]
+
+
+def mlp_logical_axes(activation: str) -> dict:
+    p = {"w_up": ("d_model", "d_ff"), "w_down": ("d_ff", "d_model")}
+    if activation in ("swiglu", "geglu"):
+        p["w_gate"] = ("d_model", "d_ff")
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array,
+                 z_loss: float = 0.0) -> jax.Array:
+    """Mean token cross-entropy; logits (..., V), labels (...) int32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, labels[..., None].astype(jnp.int32), axis=-1
+    )[..., 0]
+    loss = lse - gold
+    if z_loss:
+        loss = loss + z_loss * lse**2
+    return loss.mean()
+
+
+def causal_lm_loss(logits: jax.Array, tokens: jax.Array) -> jax.Array:
+    """Next-token prediction: logits[:, :-1] predict tokens[:, 1:]."""
+    return softmax_xent(logits[:, :-1, :], tokens[:, 1:])
+
+
+def remat_policy_of(cfg):
+    """Checkpoint policy for layer-scan remat (§Perf hillclimb lever):
+
+    * ``nothing`` — full remat: minimum memory, recomputes the whole layer;
+    * ``dots``    — save matmul outputs (checkpoint_dots): ~1/3 less
+      recompute FLOPs for ~(q_dim+2kv_dim+2d_ff) extra bytes/token·layer.
+    """
+    import jax
+
+    if getattr(cfg, "remat_policy", "nothing") == "dots":
+        return jax.checkpoint_policies.checkpoint_dots
+    return jax.checkpoint_policies.nothing_saveable

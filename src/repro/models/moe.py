@@ -1,0 +1,384 @@
+"""Mixture-of-Experts decoder (granite-3.0 MoE family): top-k routing with
+capacity-based dispatch, expert parallelism over the ``model`` mesh axis.
+
+In Lightning terms the expert axis is a launch-grid axis whose access region
+intersects *multiple chunks* (a token's top-8 experts live on 8 different
+devices) — the paper's §2.4 "exceptional case" that assembles temp chunks.
+Here that materializes as the (E, C, D) dispatch buffer: the scatter into it
+is the all-to-all the planner would emit, and XLA inserts exactly that
+collective when E is sharded over ``model`` and tokens over ``data``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import ShardingRules, constrain
+
+from . import kvcache, transformer
+from .config import ModelConfig
+from .layers import causal_lm_loss, fan_in_init, norm_init, apply_norm, remat_policy_of
+
+AUX_LOSS_COEF = 0.01
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def init_layer(key, cfg: ModelConfig) -> dict:
+    k_attn, k_router, k1, k2, k3 = jax.random.split(key, 5)
+    dt = cfg.jdtype
+    p = transformer.init_layer(k_attn, cfg)
+    del p["mlp"]
+    p["router"] = fan_in_init(k_router, (cfg.d_model, cfg.n_experts), dt)
+    p["moe"] = {
+        "w_up": fan_in_init(k1, (cfg.n_experts, cfg.d_model, cfg.d_ff), dt),
+        "w_gate": fan_in_init(k2, (cfg.n_experts, cfg.d_model, cfg.d_ff), dt),
+        "w_down": fan_in_init(k3, (cfg.n_experts, cfg.d_ff, cfg.d_model), dt),
+    }
+    return p
+
+
+def layer_logical_axes(cfg: ModelConfig) -> dict:
+    p = transformer.layer_logical_axes(cfg)
+    del p["mlp"]
+    p["router"] = ("d_model", None)
+    p["moe"] = {
+        "w_up": ("experts", "d_model", "d_ff"),
+        "w_gate": ("experts", "d_model", "d_ff"),
+        "w_down": ("experts", "d_ff", "d_model"),
+    }
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    p = transformer.init_params(key, cfg)
+    layer_keys = jax.random.split(jax.random.fold_in(key, 7), cfg.n_layers)
+    p["layers"] = jax.vmap(lambda k: init_layer(k, cfg))(layer_keys)
+    return p
+
+
+def params_logical_axes(cfg: ModelConfig) -> dict:
+    p = transformer.params_logical_axes(cfg)
+
+    def stack(ax):
+        return jax.tree.map(
+            lambda t: ("layers",) + t,
+            ax,
+            is_leaf=lambda x: isinstance(x, tuple)
+            and all(isinstance(a, (str, type(None))) for a in x),
+        )
+
+    p["layers"] = stack(layer_logical_axes(cfg))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# MoE MLP
+# ---------------------------------------------------------------------------
+
+
+def moe_mlp(
+    lp: dict,
+    x: jax.Array,  # (B, S, D)
+    cfg: ModelConfig,
+    rules: ShardingRules | None,
+) -> tuple[jax.Array, jax.Array]:
+    """Top-k routed expert MLP.  Returns (output, aux load-balance loss).
+
+    §Perf hillclimb A iteration 3: dispatch is *batched* — the buffer keeps
+    the (data-sharded) batch axis, ``(B, E, C_row, D)``, so every token's
+    scatter stays on its own device (Lightning's LOCAL pattern).  The
+    original batch-flattened global buffer forced a ~450 GB/layer all-reduce
+    over the data axis (EXPERIMENTS.md §Perf-A documents the refuted
+    iterations that led here).
+    """
+    if cfg.moe_flat_dispatch:
+        return _moe_mlp_flat(lp, x, cfg, rules)
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    e_buf = e
+    if cfg.expert_pad_to and e % cfg.expert_pad_to:
+        e_buf = ((e + cfg.expert_pad_to - 1) // cfg.expert_pad_to
+                 * cfg.expert_pad_to)
+    cap = max(1, int(s * k / e * cfg.capacity_factor))
+
+    logits = (x @ lp["router"]).astype(jnp.float32)  # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (B, S, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(axis=-1, keepdims=True), 1e-9
+    )
+
+    onehot = jax.nn.one_hot(expert_idx, e, dtype=jnp.float32)  # (B, S, k, E)
+    f = onehot.sum(axis=(1, 2)).mean(axis=0) / s
+    pbar = probs.mean(axis=(0, 1))
+    aux = e * jnp.sum(f * pbar)
+
+    # Position within each expert's per-row queue (choice-major priority).
+    flat = onehot.transpose(0, 2, 1, 3).reshape(b, k * s, e)
+    pos_flat = jnp.cumsum(flat, axis=1) - flat
+    pos = pos_flat.reshape(b, k, s, e).transpose(0, 2, 1, 3)  # (B, S, k, E)
+    pos_in_exp = (pos * onehot).sum(axis=-1)  # (B, S, k)
+    keep = (pos_in_exp < cap) & (gate_vals > 0)
+
+    idx_e = expert_idx.reshape(b, s * k)
+    idx_c = jnp.clip(pos_in_exp.astype(jnp.int32), 0, cap - 1)
+    idx_c = idx_c.reshape(b, s * k)
+    # Gates cast to the model dtype BEFORE any multiply: an f32 gate would
+    # promote the combine cotangent (and thus the whole dispatch backward)
+    # to f32 — 2× the collective bytes (§Perf-A iteration 4 finding).
+    w = jnp.where(keep, 1.0, 0.0).reshape(b, s * k).astype(x.dtype)
+    tok_rep = jnp.repeat(x, k, axis=1) * w[..., None]  # (B, S·k, D)
+
+    buf = _dispatch_scatter(idx_e, idx_c, tok_rep, e_buf, cap, rules)
+    buf = constrain(buf, rules,
+                    ("batch", "experts_buf", "expert_cap", "d_model"))
+
+    def wpad(wt):
+        if e_buf == e:
+            return wt
+        return jnp.pad(wt, ((0, e_buf - e),) + ((0, 0),) * (wt.ndim - 1))
+
+    h = jnp.einsum("becd,edf->becf", buf, wpad(lp["moe"]["w_gate"]))
+    up = jnp.einsum("becd,edf->becf", buf, wpad(lp["moe"]["w_up"]))
+    h = jax.nn.silu(h) * up
+    h = constrain(h, rules, ("batch", "experts_buf", "expert_cap", "d_ff"))
+    out_buf = jnp.einsum("becf,efd->becd", h, wpad(lp["moe"]["w_down"]))
+    out_buf = constrain(out_buf, rules,
+                        ("batch", "experts_buf", "expert_cap", "d_model"))
+
+    gathered = _combine_gather(out_buf, idx_e, idx_c, e_buf, cap, rules)
+    gates = gate_vals.astype(x.dtype).reshape(b, s * k)[..., None]
+    gathered = gathered * gates * w[..., None]
+    out = gathered.reshape(b, s, k, d).sum(axis=2)
+    return out, aux
+
+
+# Dispatch/combine as custom-vjp pairs: the adjoint of a batched scatter-add
+# is a batched gather (and vice versa) — both device-local along the batch
+# axis.  Without the explicit pair + sharding constraints on the cotangents,
+# the SPMD partitioner loses the batch sharding of the (B, E, C, D) buffer
+# cotangent and all-gathers it to full size (§Perf-A iteration 4: 64 GB
+# all-gathers per layer in the HLO).
+
+
+import functools
+
+import numpy as np
+
+
+def _int_cotangent(x):
+    return np.zeros(x.shape, jax.dtypes.float0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _dispatch_scatter(idx_e, idx_c, tok, e_buf, cap, rules):
+    d = tok.shape[-1]
+
+    def row(ie, ic, t):
+        buf = jnp.zeros((e_buf, cap, d), t.dtype)
+        return buf.at[ie, ic].add(t, mode="drop")
+
+    return jax.vmap(row)(idx_e, idx_c, tok)
+
+
+def _dispatch_scatter_fwd(idx_e, idx_c, tok, e_buf, cap, rules):
+    out = _dispatch_scatter(idx_e, idx_c, tok, e_buf, cap, rules)
+    return out, (idx_e, idx_c)
+
+
+def _dispatch_scatter_bwd(e_buf, cap, rules, res, g):
+    idx_e, idx_c = res
+    g = constrain(g, rules, ("batch", "experts_buf", "expert_cap", "d_model"))
+    dtok = jax.vmap(lambda gb, ie, ic: gb[ie, ic])(g, idx_e, idx_c)
+    dtok = constrain(dtok, rules, ("batch", None, "d_model"))
+    return _int_cotangent(idx_e), _int_cotangent(idx_c), dtok
+
+
+_dispatch_scatter.defvjp(_dispatch_scatter_fwd, _dispatch_scatter_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _combine_gather(buf, idx_e, idx_c, e_buf, cap, rules):
+    return jax.vmap(lambda ob, ie, ic: ob[ie, ic])(buf, idx_e, idx_c)
+
+
+def _combine_gather_fwd(buf, idx_e, idx_c, e_buf, cap, rules):
+    out = _combine_gather(buf, idx_e, idx_c, e_buf, cap, rules)
+    return out, (idx_e, idx_c)
+
+
+def _combine_gather_bwd(e_buf, cap, rules, res, g):
+    idx_e, idx_c = res
+    g = constrain(g, rules, ("batch", None, "d_model"))
+    d = g.shape[-1]
+
+    def row(ie, ic, gr):
+        buf = jnp.zeros((e_buf, cap, d), gr.dtype)
+        return buf.at[ie, ic].add(gr, mode="drop")
+
+    dbuf = jax.vmap(row)(idx_e, idx_c, g)
+    dbuf = constrain(dbuf, rules,
+                     ("batch", "experts_buf", "expert_cap", "d_model"))
+    return dbuf, _int_cotangent(idx_e), _int_cotangent(idx_c)
+
+
+_combine_gather.defvjp(_combine_gather_fwd, _combine_gather_bwd)
+
+
+def _moe_mlp_flat(
+    lp: dict,
+    x: jax.Array,  # (B, S, D)
+    cfg: ModelConfig,
+    rules: ShardingRules | None,
+) -> tuple[jax.Array, jax.Array]:
+    """Original batch-flattened dispatch (ablation baseline for §Perf-A)."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    xt = x.reshape(t, d)
+
+    logits = (xt @ lp["router"]).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(axis=-1, keepdims=True), 1e-9
+    )
+
+    # Load-balance aux loss (Switch): E · Σ_e f_e · p̄_e.
+    onehot = jax.nn.one_hot(expert_idx, e, dtype=jnp.float32)  # (T, k, E)
+    f = onehot.sum(axis=(0, 1)) / t  # fraction of dispatches per expert
+    pbar = probs.mean(axis=0)
+    aux = e * jnp.sum(f * pbar)
+
+    # Capacity-limited dispatch (GShard): position of each (token, choice)
+    # within its expert's queue, in (choice-major, token) priority order.
+    cap = max(1, int(t * k / e * cfg.capacity_factor))
+    flat = onehot.transpose(1, 0, 2).reshape(k * t, e)  # choice-major
+    pos_flat = (jnp.cumsum(flat, axis=0) - flat)  # (k·T, E)
+    pos = pos_flat.reshape(k, t, e).transpose(1, 0, 2)  # (T, k, E)
+    pos_in_exp = (pos * onehot).sum(axis=-1)  # (T, k)
+    keep = (pos_in_exp < cap) & (gate_vals > 0)
+
+    # Scatter tokens into the (E, C, D) buffer — the planner's all-to-all.
+    # Virtual expert padding (§Perf hillclimb A): when E doesn't divide the
+    # model axis, pad the BUFFER (and zero-pad the weights in-graph) to the
+    # next multiple so the expert axis shards; dead experts receive no
+    # tokens.  Buffer sharding uses the 'experts_buf' logical axis (weights
+    # stay on 'experts', replicated when non-divisible).
+    e_buf = e
+    if cfg.expert_pad_to and e % cfg.expert_pad_to:
+        e_buf = ((e + cfg.expert_pad_to - 1) // cfg.expert_pad_to
+                 * cfg.expert_pad_to)
+    buf = jnp.zeros((e_buf, cap, d), x.dtype)
+    idx_e = expert_idx.reshape(-1)
+    idx_c = pos_in_exp.astype(jnp.int32).reshape(-1)
+    weights = jnp.where(keep, 1.0, 0.0).reshape(-1).astype(x.dtype)
+    tok_rep = jnp.repeat(xt, k, axis=0) * weights[:, None]
+    # Re-order to (T, k) flattening used above:
+    buf = buf.at[
+        expert_idx.reshape(-1), jnp.clip(idx_c, 0, cap - 1)
+    ].add(tok_rep, mode="drop")
+    buf = constrain(buf, rules, ("experts_buf", "expert_cap", "d_model"))
+
+    def wpad(w):
+        if e_buf == e:
+            return w
+        return jnp.pad(w, ((0, e_buf - e),) + ((0, 0),) * (w.ndim - 1))
+
+    # Expert FFN (SwiGLU), buffer expert axis sharded over `model`.
+    h = jnp.einsum("ecd,edf->ecf", buf, wpad(lp["moe"]["w_gate"]))
+    up = jnp.einsum("ecd,edf->ecf", buf, wpad(lp["moe"]["w_up"]))
+    h = jax.nn.silu(h) * up
+    h = constrain(h, rules, ("experts_buf", "expert_cap", "d_ff"))
+    out_buf = jnp.einsum("ecf,efd->ecd", h, wpad(lp["moe"]["w_down"]))
+    out_buf = constrain(out_buf, rules,
+                        ("experts_buf", "expert_cap", "d_model"))
+
+    # Combine: gather each (token, choice) result and mix by gate value.
+    gathered = out_buf[
+        expert_idx.reshape(-1), jnp.clip(idx_c, 0, cap - 1)
+    ]  # (T·k, D)
+    gathered = gathered * (gate_vals.reshape(-1)[:, None] * weights[:, None]
+                           ).astype(x.dtype)
+    out = gathered.reshape(t, k, d).sum(axis=1)
+    return out.reshape(b, s, d), aux
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def forward(
+    params: dict,
+    tokens: jax.Array,
+    cfg: ModelConfig,
+    rules: ShardingRules | None = None,
+    mode: str = "train",
+    cache: kvcache.Cache | None = None,
+    extra_embeds=None,
+) -> tuple[jax.Array, kvcache.Cache | None, jax.Array]:
+    x = params["embed"][tokens] if tokens.ndim == 2 else tokens
+    b, s, _ = x.shape
+    if mode == "decode":
+        positions = cache["pos"][:, None] + jnp.arange(s)[None, :]
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    layer_caches = kvcache.layer_slice(cache) if cache is not None else None
+
+    def body(carry, scanned):
+        x, aux_acc = carry
+        lp, cache_l = scanned
+        x = constrain(x, rules, ("batch", "seq", "d_model"))
+        x, new_cache_l = transformer._attention_block(
+            lp, x, cfg, rules, positions, mode, cache_l
+        )
+        h = apply_norm(x, lp["mlp_norm"], cfg.norm)
+        moe_out, aux = moe_mlp(lp, h, cfg, rules)
+        x = x + moe_out
+        return (x, aux_acc + aux), new_cache_l
+
+    if cfg.remat and mode == "train":
+        body = jax.checkpoint(
+            body, policy=remat_policy_of(cfg)
+        )
+
+    aux0 = jnp.zeros((), jnp.float32)
+    if layer_caches is not None:
+        (x, aux), new_layer_caches = jax.lax.scan(
+            body, (x, aux0), (params["layers"], layer_caches),
+            unroll=cfg.unroll_of(cfg.n_layers),
+        )
+        new_cache = dict(new_layer_caches)
+        new_cache["pos"] = cache["pos"] + s
+    else:
+        def body_nc(carry, lp):
+            out, _ = body(carry, (lp, None))
+            return out, None
+
+        (x, aux), _ = jax.lax.scan(body_nc, (x, aux0), params["layers"],
+                                   unroll=cfg.unroll_of(cfg.n_layers))
+        new_cache = None
+
+    x = apply_norm(x, params["final_norm"], cfg.norm)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    if mode == "decode":
+        x = x[:, -1:, :]
+    logits = x @ head
+    logits = constrain(logits, rules, ("batch", "seq", "vocab"))
+    return logits, new_cache, aux / cfg.n_layers
+
+
+def train_loss(
+    params: dict,
+    batch: dict,
+    cfg: ModelConfig,
+    rules: ShardingRules | None = None,
+) -> jax.Array:
+    logits, _, aux = forward(params, batch["tokens"], cfg, rules, mode="train")
+    return causal_lm_loss(logits, batch["tokens"]) + AUX_LOSS_COEF * aux

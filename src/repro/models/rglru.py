@@ -1,0 +1,433 @@
+"""RecurrentGemma / Griffin hybrid (arXiv:2402.19427).
+
+Block pattern 1:2 — every third residual block is local (windowed) MQA
+attention, the others are recurrent blocks: linear-in → (GeLU gate branch ×
+causal conv1d → RG-LRU branch) → linear-out.  Decode state is O(window) for
+the attention blocks (ring-buffer KV) and O(1) for the recurrent blocks
+(conv tail + LRU state), which is why recurrentgemma-2b RUNS ``long_500k``.
+
+Scan structure: layers are scanned in groups of 3 (rec, rec, attn) so the
+HLO stays O(1) in depth; the ``n_layers % 3`` leftover recurrent blocks are
+unrolled as the tail.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import ShardingRules, constrain
+from repro.kernels.rg_lru import rg_lru, rg_lru_ref
+
+from .attention import multihead_attention
+from .config import ModelConfig
+from .layers import (
+    apply_rope,
+    causal_lm_loss,
+    fan_in_init,
+    mlp_apply,
+    mlp_init,
+    mlp_logical_axes,
+    norm_init,
+    normal_init,
+    rms_norm,
+    remat_policy_of,
+)
+
+LRU_C = 8.0
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def _init_rec_block(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 8)
+    dt = cfg.jdtype
+    d, w = cfg.d_model, cfg.d_model  # lru width = d_model
+    return {
+        "norm": norm_init(d, "rmsnorm", dt),
+        "w_in": fan_in_init(ks[0], (d, 2 * w), dt),
+        "conv_w": normal_init(ks[1], (cfg.conv_width, w), 0.1, dt),
+        "conv_b": jnp.zeros((w,), dt),
+        "gate_a": fan_in_init(ks[2], (w, w), dt),
+        "b_a": jnp.zeros((w,), dt),
+        "gate_x": fan_in_init(ks[3], (w, w), dt),
+        "b_x": jnp.zeros((w,), dt),
+        "log_lambda": normal_init(ks[4], (w,), 0.5, jnp.float32),
+        "w_out": fan_in_init(ks[5], (w, d), dt),
+        "mlp_norm": norm_init(d, "rmsnorm", dt),
+        "mlp": mlp_init(ks[6], d, cfg.d_ff, cfg.activation, dt),
+    }
+
+
+def _init_attn_block(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 6)
+    dt = cfg.jdtype
+    return {
+        "norm": norm_init(cfg.d_model, "rmsnorm", dt),
+        "wq": fan_in_init(ks[0], (cfg.d_model, cfg.q_dim), dt),
+        "wk": fan_in_init(ks[1], (cfg.d_model, cfg.kv_dim), dt),
+        "wv": fan_in_init(ks[2], (cfg.d_model, cfg.kv_dim), dt),
+        "wo": fan_in_init(ks[3], (cfg.q_dim, cfg.d_model), dt),
+        "mlp_norm": norm_init(cfg.d_model, "rmsnorm", dt),
+        "mlp": mlp_init(ks[4], cfg.d_model, cfg.d_ff, cfg.activation, dt),
+    }
+
+
+def _rec_axes(cfg) -> dict:
+    return {
+        "norm": {"scale": ("d_model",)},
+        "w_in": ("d_model", "d_ff"),
+        "conv_w": (None, "d_ff"),
+        "conv_b": ("d_ff",),
+        "gate_a": ("d_model", "d_ff"),
+        "b_a": ("d_ff",),
+        "gate_x": ("d_model", "d_ff"),
+        "b_x": ("d_ff",),
+        "log_lambda": ("d_ff",),
+        "w_out": ("d_ff", "d_model"),
+        "mlp_norm": {"scale": ("d_model",)},
+        "mlp": mlp_logical_axes(cfg.activation),
+    }
+
+
+def _attn_axes(cfg) -> dict:
+    return {
+        "norm": {"scale": ("d_model",)},
+        "wq": ("d_model", "heads"),
+        "wk": ("d_model", "heads"),
+        "wv": ("d_model", "heads"),
+        "wo": ("heads", "d_model"),
+        "mlp_norm": {"scale": ("d_model",)},
+        "mlp": mlp_logical_axes(cfg.activation),
+    }
+
+
+def n_groups(cfg: ModelConfig) -> tuple[int, int]:
+    """(number of (rec, rec, attn) groups, leftover recurrent blocks)."""
+    period = cfg.attn_every
+    return cfg.n_layers // period, cfg.n_layers % period
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    dt = cfg.jdtype
+    g, tail = n_groups(cfg)
+    k_embed, k_groups, k_tail, k_head = jax.random.split(key, 4)
+
+    def init_group(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "rec1": _init_rec_block(k1, cfg),
+            "rec2": _init_rec_block(k2, cfg),
+            "attn": _init_attn_block(k3, cfg),
+        }
+
+    group_keys = jax.random.split(k_groups, g)
+    params = {
+        "embed": normal_init(k_embed, (cfg.vocab, cfg.d_model), 0.02, dt),
+        "groups": jax.vmap(init_group)(group_keys),
+        "tail": [
+            _init_rec_block(jax.random.fold_in(k_tail, i), cfg)
+            for i in range(tail)
+        ],
+        "final_norm": norm_init(cfg.d_model, "rmsnorm", dt),
+    }
+    return params  # tied embeddings (gemma-style)
+
+
+def params_logical_axes(cfg: ModelConfig) -> dict:
+    def stack(ax):
+        return jax.tree.map(
+            lambda t: ("layers",) + t,
+            ax,
+            is_leaf=lambda x: isinstance(x, tuple)
+            and all(isinstance(a, (str, type(None))) for a in x),
+        )
+
+    g, tail = n_groups(cfg)
+    return {
+        "embed": ("vocab", "d_model"),
+        "groups": stack({
+            "rec1": _rec_axes(cfg), "rec2": _rec_axes(cfg),
+            "attn": _attn_axes(cfg),
+        }),
+        "tail": [_rec_axes(cfg) for _ in range(tail)],
+        "final_norm": {"scale": ("d_model",)},
+    }
+
+
+# ---------------------------------------------------------------------------
+# Decode state
+# ---------------------------------------------------------------------------
+
+
+def init_state(cfg: ModelConfig, batch: int) -> dict:
+    g, tail = n_groups(cfg)
+    w = cfg.d_model
+    cw = cfg.conv_width - 1
+    win = cfg.window or 2048
+
+    def rec_state(lead):
+        return {
+            "conv": jnp.zeros(lead + (batch, cw, w), cfg.jdtype),
+            "h": jnp.zeros(lead + (batch, w), jnp.float32),
+        }
+
+    return {
+        "rec1": rec_state((g,)),
+        "rec2": rec_state((g,)),
+        "attn_k": jnp.zeros((g, batch, cfg.n_kv_heads, win, cfg.head_dim),
+                            cfg.jdtype),
+        "attn_v": jnp.zeros((g, batch, cfg.n_kv_heads, win, cfg.head_dim),
+                            cfg.jdtype),
+        "slot_pos": jnp.full((g, batch, win), -1, jnp.int32),
+        "tail": [rec_state(()) for _ in range(tail)],
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def state_logical_axes(cfg: ModelConfig) -> dict:
+    g, tail = n_groups(cfg)
+    rec = {"conv": ("layers", "batch", None, "d_ff"),
+           "h": ("layers", "batch", "d_ff")}
+    rec_tail = {"conv": ("batch", None, "d_ff"), "h": ("batch", "d_ff")}
+    return {
+        "rec1": dict(rec), "rec2": dict(rec),
+        "attn_k": ("layers", "batch", "kv_heads", "kv_seq", "head_dim"),
+        "attn_v": ("layers", "batch", "kv_heads", "kv_seq", "head_dim"),
+        "slot_pos": ("layers", "batch", "kv_seq"),
+        "tail": [dict(rec_tail) for _ in range(tail)],
+        "pos": ("batch",),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 tail: jax.Array | None):
+    """Depthwise causal conv along seq.  x (B,S,W); w (cw, W).  ``tail`` is
+    the previous cw-1 inputs for decode; returns (y, new_tail)."""
+    cw = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    ext = jnp.concatenate([tail, x], axis=1)  # (B, S+cw-1, W)
+    y = sum(
+        ext[:, i : i + x.shape[1], :] * w[i][None, None, :]
+        for i in range(cw)
+    ) + b
+    return y, ext[:, -(cw - 1):, :]
+
+
+def _rec_block(lp, x, cfg, st, rules):
+    """Recurrent residual block; ``st`` = {conv, h} or None (fresh state).
+    Always returns (x, new_state) — callers in train mode discard it."""
+    xn = rms_norm(x, lp["norm"]["scale"])
+    zy = xn @ lp["w_in"]
+    z, y = jnp.split(zy, 2, axis=-1)
+    z = constrain(z, rules, ("batch", "seq", "d_ff"))
+    conv_tail = st["conv"] if st is not None else None
+    z, new_conv = _causal_conv(z, lp["conv_w"], lp["conv_b"], conv_tail)
+    r = jax.nn.sigmoid(z @ lp["gate_a"] + lp["b_a"]).astype(jnp.float32)
+    i = jax.nn.sigmoid(z @ lp["gate_x"] + lp["b_x"])
+    log_a = -LRU_C * jax.nn.softplus(lp["log_lambda"]) * r  # (B,S,W) ≤ 0
+    gx = i * z
+    h0 = st["h"] if st is not None else None
+    core = rg_lru if cfg.attention_impl == "pallas" else rg_lru_ref
+    h, h_final = core(log_a.astype(gx.dtype), gx, h0, return_state=True)
+    out = (h * jax.nn.gelu(y, approximate=True)) @ lp["w_out"]
+    x = x + out
+    xn = rms_norm(x, lp["mlp_norm"]["scale"])
+    x = x + mlp_apply(lp["mlp"], xn, cfg.activation, rules)
+    return x, {"conv": new_conv, "h": h_final}
+
+
+def _attn_block_train(lp, x, cfg, positions, rules, want_cache=False):
+    b, s, _ = x.shape
+    win = cfg.window or 2048
+    xn = rms_norm(x, lp["norm"]["scale"])
+    q = (xn @ lp["wq"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = (xn @ lp["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = (xn @ lp["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    q = apply_rope(q, positions, cfg.rope_theta).transpose(0, 2, 1, 3)
+    k = apply_rope(k, positions, cfg.rope_theta).transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    out = multihead_attention(
+        q, k, v, impl=cfg.attention_impl, causal=True, window=cfg.window
+    )
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, cfg.q_dim)
+    x = x + out @ lp["wo"]
+    xn = rms_norm(x, lp["mlp_norm"]["scale"])
+    x = x + mlp_apply(lp["mlp"], xn, cfg.activation, rules)
+    if not want_cache:
+        return x, None
+    # Build the ring-buffer cache from the last `win` positions (prefill).
+    w_eff = min(win, s)
+    last_pos = positions[:, s - w_eff:]  # (B, w_eff)
+    slots = (jnp.arange(s - w_eff, s)) % win
+    k_cache = jnp.zeros((b, cfg.n_kv_heads, win, cfg.head_dim), x.dtype)
+    v_cache = jnp.zeros_like(k_cache)
+    k_cache = k_cache.at[:, :, slots, :].set(k[:, :, s - w_eff:, :])
+    v_cache = v_cache.at[:, :, slots, :].set(v[:, :, s - w_eff:, :])
+    slot_pos = jnp.full((b, win), -1, jnp.int32).at[:, slots].set(last_pos)
+    return x, {"k": k_cache, "v": v_cache, "slot_pos": slot_pos}
+
+
+def _attn_block_decode(lp, x, cfg, pos, st, rules):
+    """One-token local attention against the ring-buffer window cache.
+
+    The cache holds the last ``window`` tokens; new entries overwrite slot
+    ``pos % window`` and ``slot_pos`` records each slot's absolute position
+    (−1 = empty) for masking.
+    """
+    b, s, _ = x.shape  # s == 1
+    win = cfg.window or 2048
+    xn = rms_norm(x, lp["norm"]["scale"])
+    positions = pos[:, None]
+    q = (xn @ lp["wq"]).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+    k = (xn @ lp["wk"]).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+    v = (xn @ lp["wv"]).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    slot = pos % win  # (B,) per-row ring slot
+    row_write = jax.vmap(
+        lambda buf, val, p: jax.lax.dynamic_update_slice_in_dim(
+            buf, val, p, axis=1
+        )
+    )
+    k_cache = row_write(
+        st["k"], k.transpose(0, 2, 1, 3).astype(st["k"].dtype), slot
+    )
+    v_cache = row_write(
+        st["v"], v.transpose(0, 2, 1, 3).astype(st["v"].dtype), slot
+    )
+    slot_pos = jax.vmap(
+        lambda buf, val, p: jax.lax.dynamic_update_slice_in_dim(
+            buf, val, p, axis=0
+        )
+    )(st["slot_pos"], pos[:, None], slot)
+
+    qh = q[:, 0].transpose(0, 1, 2).reshape(b, cfg.n_heads, cfg.head_dim)
+    group = cfg.n_heads // cfg.n_kv_heads
+    kk = jnp.repeat(k_cache, group, axis=1)
+    vv = jnp.repeat(v_cache, group, axis=1)
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    logits = jnp.einsum("bhd,bhtd->bht", qh, kk).astype(jnp.float32) * scale
+    valid = (slot_pos >= 0) & (slot_pos <= pos[:, None])
+    logits = jnp.where(valid[:, None, :], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bht,bhtd->bhd", p.astype(x.dtype), vv)
+    out = out.reshape(b, 1, cfg.q_dim)
+    x = x + out @ lp["wo"]
+    xn = rms_norm(x, lp["mlp_norm"]["scale"])
+    x = x + mlp_apply(lp["mlp"], xn, cfg.activation, rules)
+    return x, {"k": k_cache, "v": v_cache, "slot_pos": slot_pos}
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def forward(
+    params: dict,
+    tokens: jax.Array,
+    cfg: ModelConfig,
+    rules: ShardingRules | None = None,
+    mode: str = "train",
+    state: dict | None = None,
+    extra_embeds=None,
+):
+    x = params["embed"][tokens] if tokens.ndim == 2 else tokens
+    x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    b, s, _ = x.shape
+    use_state = state is not None
+    if mode == "decode":
+        positions = state["pos"][:, None] + jnp.arange(s)[None, :]
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    def group_body_decode(x, scanned):
+        gp, (st1, st2, ak, av, sp) = scanned
+        x, n1 = _rec_block(gp["rec1"], x, cfg, st1, rules)
+        x, n2 = _rec_block(gp["rec2"], x, cfg, st2, rules)
+        x, natt = _attn_block_decode(
+            gp["attn"], x, cfg, state["pos"],
+            {"k": ak, "v": av, "slot_pos": sp}, rules,
+        )
+        return x, (n1, n2, natt["k"], natt["v"], natt["slot_pos"])
+
+    def group_body(x, gp):
+        want = mode == "prefill"
+        x, n1 = _rec_block(gp["rec1"], x, cfg, None, rules)
+        x, n2 = _rec_block(gp["rec2"], x, cfg, None, rules)
+        x, cache = _attn_block_train(
+            gp["attn"], x, cfg, positions, rules, want_cache=want
+        )
+        if want:
+            return x, (n1, n2, cache["k"], cache["v"], cache["slot_pos"])
+        return x, None
+
+    if cfg.remat and mode == "train":
+        group_body = jax.checkpoint(
+            group_body, policy=remat_policy_of(cfg)
+        )
+
+    if use_state and mode == "decode":
+        x, (n1, n2, nk, nv, nsp) = jax.lax.scan(
+            group_body_decode, x,
+            (params["groups"],
+             (state["rec1"], state["rec2"], state["attn_k"],
+              state["attn_v"], state["slot_pos"])),
+            unroll=cfg.unroll_of(n_groups(cfg)[0]),
+        )
+        new_state = dict(state)
+        new_state["rec1"] = n1
+        new_state["rec2"] = n2
+        new_state["attn_k"], new_state["attn_v"] = nk, nv
+        new_state["slot_pos"] = nsp
+        tail_states = []
+        for lp, st in zip(params["tail"], state["tail"]):
+            x, nst = _rec_block(lp, x, cfg, st, rules)
+            tail_states.append(nst)
+        new_state["tail"] = tail_states
+        new_state["pos"] = state["pos"] + s
+    elif mode == "prefill":
+        x, (n1, n2, nk, nv, nsp) = jax.lax.scan(
+            group_body, x, params["groups"],
+            unroll=cfg.unroll_of(n_groups(cfg)[0]),
+        )
+        tail_states = []
+        for lp in params["tail"]:
+            x, nst = _rec_block(lp, x, cfg, None, rules)
+            tail_states.append(nst)
+        new_state = {
+            "rec1": n1, "rec2": n2, "attn_k": nk, "attn_v": nv,
+            "slot_pos": nsp, "tail": tail_states,
+            "pos": jnp.full((b,), s, jnp.int32),
+        }
+    else:
+        x, _ = jax.lax.scan(group_body, x, params["groups"],
+                            unroll=cfg.unroll_of(n_groups(cfg)[0]))
+        for lp in params["tail"]:
+            x, _ = _rec_block(lp, x, cfg, None, rules)
+        new_state = None
+
+    x = rms_norm(x, params["final_norm"]["scale"])
+    if mode == "decode":
+        x = x[:, -1:, :]
+    logits = x @ params["embed"].T  # tied
+    logits = constrain(logits, rules, ("batch", "seq", "vocab"))
+    return logits, new_state
+
+
+def train_loss(params, batch, cfg, rules=None):
+    logits, _ = forward(params, batch["tokens"], cfg, rules, mode="train")
+    return causal_lm_loss(logits, batch["tokens"])

@@ -1,0 +1,289 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892) — attention-free decoder.
+
+Per layer: a *time-mix* block (token shift, data-dependent per-channel decay,
+the WKV6 state recurrence, grouped output norm, silu gate) and a
+*channel-mix* block (token shift + squared-relu FFN).  State per layer for
+decode: the (K×V) WKV matrix per head plus the previous token's activations
+for the two token shifts — O(1) in sequence length, which is why rwkv6-3b
+RUNS the ``long_500k`` shape the quadratic archs skip.
+
+Lightning applicability: no attention to shard — superblocks split the
+(batch, heads) grid; the WKV scan is the sequential per-superblock kernel
+(Pallas) and the only cross-device traffic is DP gradient reduction.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import ShardingRules, constrain
+from repro.kernels.rwkv6 import wkv6, wkv6_ref
+
+from .config import ModelConfig
+from .layers import causal_lm_loss, fan_in_init, norm_init, normal_init, rms_norm, remat_policy_of
+
+LORA_DIM = 64
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def _n_heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // cfg.wkv_head_dim
+
+
+def init_layer(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 12)
+    dt = cfg.jdtype
+    d = cfg.d_model
+    return {
+        "ln1": norm_init(d, "rmsnorm", dt),
+        "ln2": norm_init(d, "rmsnorm", dt),
+        # time-mix interpolation coefficients (r, k, v, g, w)
+        "mu": normal_init(ks[0], (5, d), 0.02, dt),
+        "wr": fan_in_init(ks[1], (d, d), dt),
+        "wk": fan_in_init(ks[2], (d, d), dt),
+        "wv": fan_in_init(ks[3], (d, d), dt),
+        "wg": fan_in_init(ks[4], (d, d), dt),
+        "wo": fan_in_init(ks[5], (d, d), dt),
+        # data-dependent decay: w = w0 + tanh(xw A) B
+        "w0": normal_init(ks[6], (d,), 0.02, dt),
+        "wa": fan_in_init(ks[7], (d, LORA_DIM), dt),
+        "wb": fan_in_init(ks[8], (LORA_DIM, d), dt),
+        "bonus": normal_init(ks[9], (_n_heads(cfg), cfg.wkv_head_dim), 0.02,
+                             jnp.float32),
+        "gn_scale": jnp.ones((d,), dt),  # group norm over heads
+        # channel-mix
+        "mu_c": normal_init(ks[10], (2, d), 0.02, dt),
+        "ck": fan_in_init(ks[11], (d, cfg.d_ff), dt),
+        "cr": fan_in_init(jax.random.fold_in(key, 99), (d, d), dt),
+        "cv": fan_in_init(jax.random.fold_in(key, 98), (cfg.d_ff, d), dt),
+    }
+
+
+def layer_logical_axes(cfg: ModelConfig) -> dict:
+    return {
+        "ln1": {"scale": ("d_model",)},
+        "ln2": {"scale": ("d_model",)},
+        "mu": (None, "d_model"),
+        "wr": ("d_model", "heads"),
+        "wk": ("d_model", "heads"),
+        "wv": ("d_model", "heads"),
+        "wg": ("d_model", "heads"),
+        "wo": ("heads", "d_model"),
+        "w0": ("heads",),
+        "wa": ("d_model", None),
+        "wb": (None, "heads"),
+        "bonus": (None, None),  # (H, hd) head count may not divide mesh
+        "gn_scale": ("heads",),
+        "mu_c": (None, "d_model"),
+        "ck": ("d_model", "d_ff"),
+        "cr": ("d_model", "d_model"),
+        "cv": ("d_ff", "d_model"),
+    }
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    dt = cfg.jdtype
+    k_embed, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    return {
+        "embed": normal_init(k_embed, (cfg.vocab, cfg.d_model), 0.02, dt),
+        "layers": jax.vmap(lambda k: init_layer(k, cfg))(layer_keys),
+        "final_norm": norm_init(cfg.d_model, "rmsnorm", dt),
+        "lm_head": fan_in_init(k_head, (cfg.d_model, cfg.vocab), dt),
+    }
+
+
+def params_logical_axes(cfg: ModelConfig) -> dict:
+    def stack(ax):
+        return jax.tree.map(
+            lambda t: ("layers",) + t,
+            ax,
+            is_leaf=lambda x: isinstance(x, tuple)
+            and all(isinstance(a, (str, type(None))) for a in x),
+        )
+
+    return {
+        "embed": ("vocab", "d_model"),
+        "layers": stack(layer_logical_axes(cfg)),
+        "final_norm": {"scale": ("d_model",)},
+        "lm_head": ("d_model", "vocab"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# State (decode)
+# ---------------------------------------------------------------------------
+
+
+def init_state(cfg: ModelConfig, batch: int) -> dict:
+    h = _n_heads(cfg)
+    return {
+        "wkv": jnp.zeros(
+            (cfg.n_layers, batch, h, cfg.wkv_head_dim, cfg.wkv_head_dim),
+            jnp.float32,
+        ),
+        "shift_t": jnp.zeros((cfg.n_layers, batch, cfg.d_model), cfg.jdtype),
+        "shift_c": jnp.zeros((cfg.n_layers, batch, cfg.d_model), cfg.jdtype),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def state_logical_axes(cfg: ModelConfig) -> dict:
+    return {
+        # wkv head axis is a COUNT (40) — may not divide the model axis;
+        # 'heads' in this family labels flat d_model dims, so keep the
+        # state replicated across model (it is small: H×K×V per seq).
+        "wkv": ("layers", "batch", None, None, None),
+        "shift_t": ("layers", "batch", "d_model"),
+        "shift_c": ("layers", "batch", "d_model"),
+        "pos": ("batch",),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _group_norm(x: jax.Array, scale: jax.Array, n_heads: int) -> jax.Array:
+    """LayerNorm within each head's channels (RWKV's GroupNorm(H))."""
+    b, s, d = x.shape
+    xh = x.reshape(b, s, n_heads, d // n_heads).astype(jnp.float32)
+    mu = xh.mean(axis=-1, keepdims=True)
+    var = ((xh - mu) ** 2).mean(axis=-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + 1e-5)
+    return (xh.reshape(b, s, d) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _token_shift(x: jax.Array, prev: jax.Array | None) -> jax.Array:
+    """x shifted right by one along seq; position 0 takes ``prev`` (decode
+    state) or zeros."""
+    first = (
+        prev[:, None, :]
+        if prev is not None
+        else jnp.zeros_like(x[:, :1, :])
+    )
+    return jnp.concatenate([first, x[:, :-1, :]], axis=1)
+
+
+def time_mix(
+    lp: dict, x: jax.Array, cfg: ModelConfig,
+    wkv_state: jax.Array | None, shift_prev: jax.Array | None,
+    rules: ShardingRules | None,
+):
+    b, s, d = x.shape
+    h = _n_heads(cfg)
+    hd = cfg.wkv_head_dim
+    xs = _token_shift(x, shift_prev)
+    delta = xs - x
+    mu = lp["mu"]
+    xr = x + delta * mu[0]
+    xk = x + delta * mu[1]
+    xv = x + delta * mu[2]
+    xg = x + delta * mu[3]
+    xw = x + delta * mu[4]
+
+    r = (xr @ lp["wr"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = (xk @ lp["wk"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    v = (xv @ lp["wv"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    g = xg @ lp["wg"]
+    w_logit = lp["w0"] + jnp.tanh(xw @ lp["wa"]) @ lp["wb"]
+    w = jnp.exp(-jnp.exp(w_logit.astype(jnp.float32)))  # decay ∈ (0, 1)
+    w = w.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+
+    core = wkv6 if cfg.attention_impl == "pallas" else wkv6_ref
+    out, new_state = core(
+        r, k, v, w.astype(r.dtype), lp["bonus"],
+        initial_state=wkv_state, return_state=True,
+    )
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, d)
+    out = _group_norm(out, lp["gn_scale"], h)
+    out = out * jax.nn.silu(g)
+    out = constrain(out, rules, ("batch", "seq", "heads"))
+    return out @ lp["wo"], new_state, x[:, -1, :]
+
+
+def channel_mix(
+    lp: dict, x: jax.Array, shift_prev: jax.Array | None,
+    rules: ShardingRules | None,
+):
+    xs = _token_shift(x, shift_prev)
+    delta = xs - x
+    xk = x + delta * lp["mu_c"][0]
+    xr = x + delta * lp["mu_c"][1]
+    kk = jnp.square(jax.nn.relu(xk @ lp["ck"]))
+    kk = constrain(kk, rules, ("batch", "seq", "d_ff"))
+    return jax.nn.sigmoid(xr @ lp["cr"]) * (kk @ lp["cv"]), x[:, -1, :]
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def forward(
+    params: dict,
+    tokens: jax.Array,
+    cfg: ModelConfig,
+    rules: ShardingRules | None = None,
+    mode: str = "train",
+    state: dict | None = None,
+    extra_embeds=None,
+):
+    x = params["embed"][tokens] if tokens.ndim == 2 else tokens
+    use_state = state is not None
+
+    def body(x, scanned):
+        if use_state:
+            lp, (wkv_s, sh_t, sh_c) = scanned
+        else:
+            lp = scanned
+            wkv_s = sh_t = sh_c = None
+        xn = rms_norm(x, lp["ln1"]["scale"])
+        tm, new_wkv, new_sh_t = time_mix(lp, xn, cfg, wkv_s, sh_t, rules)
+        x = x + tm
+        xn = rms_norm(x, lp["ln2"]["scale"])
+        cm, new_sh_c = channel_mix(lp, xn, sh_c, rules)
+        x = x + cm
+        x = constrain(x, rules, ("batch", "seq", "d_model"))
+        if use_state:
+            return x, (new_wkv, new_sh_t, new_sh_c)
+        return x, None
+
+    if cfg.remat and mode == "train":
+        body = jax.checkpoint(
+            body, policy=remat_policy_of(cfg)
+        )
+
+    if use_state:
+        x, (wkv_n, sh_t_n, sh_c_n) = jax.lax.scan(
+            body, x,
+            (params["layers"],
+             (state["wkv"], state["shift_t"], state["shift_c"])),
+            unroll=cfg.unroll_of(cfg.n_layers),
+        )
+        new_state = {
+            "wkv": wkv_n, "shift_t": sh_t_n, "shift_c": sh_c_n,
+            "pos": state["pos"] + x.shape[1],
+        }
+    else:
+        x, _ = jax.lax.scan(body, x, params["layers"],
+                            unroll=cfg.unroll_of(cfg.n_layers))
+        new_state = None
+
+    x = rms_norm(x, params["final_norm"]["scale"])
+    if mode == "decode":
+        x = x[:, -1:, :]
+    logits = x @ params["lm_head"]
+    logits = constrain(logits, rules, ("batch", "seq", "vocab"))
+    return logits, new_state
+
+
+def train_loss(params, batch, cfg, rules=None):
+    logits, _ = forward(params, batch["tokens"], cfg, rules, mode="train")
+    return causal_lm_loss(logits, batch["tokens"])

@@ -1,0 +1,321 @@
+"""Dense decoder-only transformer (phi3 / gemma / stablelm / qwen families).
+
+GQA/MQA attention with RoPE, SwiGLU/GeGLU MLPs, RMSNorm, optional QKV bias
+(qwen).  Scan-over-layers with optional remat keeps the HLO O(1) in depth.
+All activations/weights carry logical axis names; sharding is applied via
+:func:`repro.dist.sharding.constrain` from rules the Lightning planner
+derives (DP baseline = batch-split superblocks + replicated weights; TP/SP
+optimized = head/ff/vocab-split with XLA-inserted collectives).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import ShardingRules, constrain
+
+from . import kvcache
+from .attention import decode_attention, multihead_attention
+from .config import ModelConfig
+from .layers import (
+    apply_norm,
+    apply_rope,
+    causal_lm_loss,
+    fan_in_init,
+    mlp_apply,
+    mlp_init,
+    mlp_logical_axes,
+    norm_init,
+    normal_init,
+    remat_policy_of,
+)
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def init_layer(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 8)
+    dt = cfg.jdtype
+    p = {
+        "attn_norm": norm_init(cfg.d_model, cfg.norm, dt),
+        "wq": fan_in_init(ks[0], (cfg.d_model, cfg.q_dim), dt),
+        "wk": fan_in_init(ks[1], (cfg.d_model, cfg.kv_dim), dt),
+        "wv": fan_in_init(ks[2], (cfg.d_model, cfg.kv_dim), dt),
+        "wo": fan_in_init(ks[3], (cfg.q_dim, cfg.d_model), dt),
+        "mlp_norm": norm_init(cfg.d_model, cfg.norm, dt),
+        "mlp": mlp_init(ks[4], cfg.d_model, cfg.d_ff, cfg.activation, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), dt)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), dt)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), dt)
+    return p
+
+
+def layer_logical_axes(cfg: ModelConfig) -> dict:
+    norm_ax = (
+        {"scale": ("d_model",)}
+        if cfg.norm == "rmsnorm"
+        else {"scale": ("d_model",), "bias": ("d_model",)}
+    )
+    p = {
+        "attn_norm": dict(norm_ax),
+        "wq": ("d_model", "heads"),
+        "wk": ("d_model", "heads"),
+        "wv": ("d_model", "heads"),
+        "wo": ("heads", "d_model"),
+        "mlp_norm": dict(norm_ax),
+        "mlp": mlp_logical_axes(cfg.activation),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = ("heads",)
+        p["bk"] = ("heads",)
+        p["bv"] = ("heads",)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    dt = cfg.jdtype
+    k_embed, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: init_layer(k, cfg))(layer_keys)
+    p = {
+        "embed": normal_init(k_embed, (cfg.vocab, cfg.d_model), 0.02, dt),
+        "layers": layers,
+        "final_norm": norm_init(cfg.d_model, cfg.norm, dt),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = fan_in_init(k_head, (cfg.d_model, cfg.vocab), dt)
+    return p
+
+
+def params_logical_axes(cfg: ModelConfig) -> dict:
+    def stack(ax):
+        return jax.tree.map(
+            lambda t: ("layers",) + t,
+            ax,
+            is_leaf=lambda x: isinstance(x, tuple)
+            and all(isinstance(a, (str, type(None))) for a in x),
+        )
+
+    p = {
+        "embed": ("vocab", "d_model"),
+        "layers": stack(layer_logical_axes(cfg)),
+        "final_norm": (
+            {"scale": ("d_model",)}
+            if cfg.norm == "rmsnorm"
+            else {"scale": ("d_model",), "bias": ("d_model",)}
+        ),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = ("d_model", "vocab")
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _attention_block(
+    lp: dict,
+    x: jax.Array,  # (B, S, D)
+    cfg: ModelConfig,
+    rules: ShardingRules | None,
+    positions: jax.Array,  # (B, S)
+    mode: str,
+    cache_l: dict | None,
+    window: int | None = None,
+):
+    b, s, _ = x.shape
+    h = apply_norm(x, lp["attn_norm"], cfg.norm)
+    q = h @ lp["wq"]
+    k = h @ lp["wk"]
+    v = h @ lp["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+    # Constrain the *flat* projection dims (head-count may not divide the
+    # model axis — qwen's 40 heads; flat dims always do when sharded).
+    q = constrain(q, rules, ("batch", "seq", "heads"))
+    k = constrain(k, rules, ("batch", "seq", "heads"))
+    v = constrain(v, rules, ("batch", "seq", "heads"))
+    q = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = q.transpose(0, 2, 1, 3)  # (B, H, S, D)
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+
+    new_cache_l = None
+    if mode == "decode":
+        assert cache_l is not None
+        new_cache_l = kvcache.update_layer(cfg, cache_l, k, v, positions[:, 0])
+        kv_len = positions[:, 0] + 1
+        if cfg.kv_quant and cfg.kv_fused and window is None:
+            # §Perf hillclimb C: attend on the int8 cache directly — scales
+            # factor out of both dots; the cache is read once, in int8.
+            from .attention import decode_attention_quant
+
+            out = decode_attention_quant(
+                q[:, :, 0],
+                new_cache_l["k_q"], new_cache_l["k_s"],
+                new_cache_l["v_q"], new_cache_l["v_s"],
+                kv_len,
+            )
+            out = out[:, :, None, :].transpose(0, 2, 1, 3)
+            out = out.reshape(b, s, cfg.q_dim)
+            out = constrain(out, rules, ("batch", "seq", "heads"))
+            return x + out @ lp["wo"], new_cache_l
+        k_full, v_full = kvcache.read_layer(cfg, new_cache_l)
+        if window is not None:
+            # Local attention: restrict to the last `window` positions by
+            # masking inside decode attention (kv_len caps the range; the
+            # lower bound is enforced via a shifted mask).
+            out = _windowed_decode(q[:, :, 0], k_full, v_full, kv_len, window)
+        else:
+            out = decode_attention(
+                q[:, :, 0], k_full, v_full, kv_len,
+                impl="pallas" if cfg.attention_impl == "pallas" else "xla",
+            )
+        out = out[:, :, None, :]  # (B, H, 1, D)
+    else:
+        if mode == "prefill" and cache_l is not None:
+            new_cache_l = kvcache.update_layer(
+                cfg, cache_l, k, v, jnp.zeros((b,), jnp.int32)
+            )
+        out = multihead_attention(
+            q, k, v,
+            impl=cfg.attention_impl, causal=True, window=window,
+        )
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, cfg.q_dim)
+    out = constrain(out, rules, ("batch", "seq", "heads"))
+    return x + out @ lp["wo"], new_cache_l
+
+
+def _windowed_decode(q, k, v, kv_len, window):
+    """Decode attention with a sliding window: positions below
+    kv_len - window are masked out (naive masked path; window caches are
+    small so this stays cheap)."""
+    b, hq, d = q.shape
+    _, hkv, t, _ = k.shape
+    group = hq // hkv
+    scale = 1.0 / math.sqrt(d)
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhd,bhtd->bht", q, kk).astype(jnp.float32) * scale
+    pos = jnp.arange(t)[None, None, :]
+    lo = (kv_len - window)[:, None, None]
+    hi = kv_len[:, None, None]
+    mask = (pos >= jnp.maximum(lo, 0)) & (pos < hi)
+    logits = jnp.where(mask, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bht,bhtd->bhd", p.astype(q.dtype), vv)
+
+
+def _layer_fn(
+    cfg: ModelConfig,
+    rules: ShardingRules | None,
+    mode: str,
+    x: jax.Array,
+    lp: dict,
+    cache_l: dict | None,
+    positions: jax.Array,
+):
+    x = constrain(x, rules, ("batch", "seq", "d_model"))
+    x, new_cache_l = _attention_block(
+        lp, x, cfg, rules, positions, mode, cache_l
+    )
+    h = apply_norm(x, lp["mlp_norm"], cfg.norm)
+    x = x + mlp_apply(lp["mlp"], h, cfg.activation, rules)
+    x = constrain(x, rules, ("batch", "seq", "d_model"))
+    return x, new_cache_l
+
+
+def forward(
+    params: dict,
+    tokens: jax.Array,  # (B, S) int32 — or (B, S, D) pre-embedded
+    cfg: ModelConfig,
+    rules: ShardingRules | None = None,
+    mode: str = "train",  # train | prefill | decode
+    cache: kvcache.Cache | None = None,
+    extra_embeds: jax.Array | None = None,  # VLM patch embeds (B, P, D)
+) -> tuple[jax.Array, kvcache.Cache | None]:
+    if tokens.ndim == 2:
+        x = params["embed"][tokens]
+    else:
+        x = tokens
+    if cfg.name.startswith("gemma") or cfg.name.startswith("recurrentgemma"):
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    b, s, _ = x.shape
+
+    if mode == "decode":
+        assert cache is not None
+        positions = cache["pos"][:, None] + jnp.arange(s)[None, :]
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    layer_caches = kvcache.layer_slice(cache) if cache is not None else None
+
+    def body(x, scanned):
+        lp, cache_l = scanned
+        return _layer_fn(cfg, rules, mode, x, lp, cache_l, positions)
+
+    if cfg.remat and mode == "train":
+        body = jax.checkpoint(
+            body, policy=remat_policy_of(cfg)
+        )
+
+    if layer_caches is not None:
+        x, new_layer_caches = jax.lax.scan(
+            body, x, (params["layers"], layer_caches),
+            unroll=cfg.unroll_of(cfg.n_layers),
+        )
+        new_cache = dict(new_layer_caches)
+        new_cache["pos"] = cache["pos"] + (s if mode == "decode" else 0)
+        if mode == "prefill":
+            new_cache["pos"] = cache["pos"] + s
+    else:
+        def body_nocache(x, lp):
+            out, _ = body(x, (lp, None))
+            return out, None
+
+        x, _ = jax.lax.scan(body_nocache, x, params["layers"],
+                            unroll=cfg.unroll_of(cfg.n_layers))
+        new_cache = None
+
+    x = apply_norm(x, params["final_norm"], cfg.norm)
+    head = (
+        params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    )
+    if mode == "decode":
+        x = x[:, -1:, :]
+    logits = x @ head
+    logits = constrain(logits, rules, ("batch", "seq", "vocab"))
+    return logits, new_cache
+
+
+def train_loss(
+    params: dict,
+    batch: dict,
+    cfg: ModelConfig,
+    rules: ShardingRules | None = None,
+) -> jax.Array:
+    logits, _ = forward(
+        params, batch["tokens"], cfg, rules, mode="train",
+        extra_embeds=batch.get("patch_embeds"),
+    )
+    if "patch_embeds" in batch and batch["patch_embeds"] is not None:
+        p = batch["patch_embeds"].shape[1]
+        logits = logits[:, p:, :]
+    return causal_lm_loss(logits, batch["tokens"])

@@ -1,0 +1,16 @@
+"""Optimizer substrate: AdamW (+ZeRO-1 sharding), schedules, compression."""
+
+from .adamw import AdamWState, adamw_init, adamw_update, global_norm
+from .schedule import cosine_with_warmup
+from .compression import (
+    compress_int8,
+    decompress_int8,
+    compressed_psum,
+    ErrorFeedback,
+)
+
+__all__ = [
+    "AdamWState", "adamw_init", "adamw_update", "global_norm",
+    "cosine_with_warmup", "compress_int8", "decompress_int8",
+    "compressed_psum", "ErrorFeedback",
+]

@@ -1,0 +1,133 @@
+"""AdamW with mixed precision and ZeRO-1-style sharded state.
+
+Params are stored in the model dtype (bf16 at scale); the optimizer keeps
+f32 master weights + first/second moments.  Under the ``tp_rules`` preset the
+master/moment trees inherit the params' logical axes **plus** a ZeRO-1
+refinement: any axis that is unsharded in the param spec is sharded over the
+``data`` axis when divisible — optimizer state is what dominates memory at
+scale (12 bytes/param vs 2), exactly the paper's "spill the big thing"
+lesson applied to training state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class AdamWState:
+    step: jax.Array  # () int32
+    master: Any  # f32 copy of params
+    mu: Any  # first moment (f32)
+    nu: Any  # second moment (f32)
+
+    def tree_flatten(self):  # pragma: no cover - pytree plumbing
+        return (self.step, self.master, self.mu, self.nu), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):  # pragma: no cover
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    AdamWState,
+    lambda s: ((s.step, s.master, s.mu, s.nu), None),
+    lambda aux, ch: AdamWState(*ch),
+)
+
+
+def adamw_init(params: Any) -> AdamWState:
+    # copy=True: when params are already f32, astype would alias the same
+    # buffer and donation of (params, master) would double-donate.
+    f32 = lambda t: jax.tree.map(
+        lambda x: jnp.array(x, dtype=jnp.float32, copy=True), t
+    )
+    zeros = lambda t: jax.tree.map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), t
+    )
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        master=f32(params),
+        mu=zeros(params),
+        nu=zeros(params),
+    )
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(x.astype(jnp.float32) ** 2) for x in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(
+    grads: Any,
+    state: AdamWState,
+    lr: jax.Array | float,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_clip: float = 1.0,
+    param_dtype=jnp.bfloat16,
+) -> tuple[Any, AdamWState, dict]:
+    """Returns (new model-dtype params, new state, metrics)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, grads)
+    t = step.astype(jnp.float32)
+    mu_hat_scale = 1.0 / (1.0 - b1**t)
+    nu_hat_scale = 1.0 / (1.0 - b2**t)
+
+    def upd(p, m, v):
+        u = (m * mu_hat_scale) / (jnp.sqrt(v * nu_hat_scale) + eps)
+        return p - lr * (u + weight_decay * p)
+
+    master = jax.tree.map(upd, state.master, mu, nu)
+    params = jax.tree.map(lambda x: x.astype(param_dtype), master)
+    new_state = AdamWState(step=step, master=master, mu=mu, nu=nu)
+    return params, new_state, {"grad_norm": gnorm, "lr": jnp.asarray(lr)}
+
+
+def zero1_axes(param_logical_axes: Any, shard_axis: str = "data") -> Any:
+    """ZeRO-1 logical axes for optimizer-state leaves.
+
+    The f32 master + two moments are 12 bytes/param — 6× the bf16 params —
+    so they must shard over BOTH the model axis (inherited from the param's
+    own layout) AND the data axis.  For every 2-D+ weight we relabel its
+    ``d_model`` axis as ``zero1`` (mapped to the data axes by the rules
+    table): e.g. qwen's w_up master goes (d_model, d_ff) →
+    (zero1 × data=16, d_ff × model=16) = 1/256 per device.  Without this the
+    qwen train cell needs 31 GB/device (> 16 GB HBM) — with it, ~5 GB.
+    Leaves without a d_model axis (norm scales, biases) shard their first
+    axis when it is otherwise unsharded.
+    """
+
+    def refine(axes):
+        if not isinstance(axes, tuple) or not axes:
+            return axes
+        out = list(axes)
+        for i, a in enumerate(out):
+            if a == "d_model":
+                out[i] = "zero1"
+                return tuple(out)
+        # No d_model axis: data-shard the first unsharded axis of 1-D
+        # leaves (norms/biases); leave fully-model-sharded leaves alone.
+        if len(out) == 1 and out[0] is None:
+            return ("zero1",)
+        return tuple(out)
+
+    return jax.tree.map(
+        refine,
+        param_logical_axes,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(a, (str, type(None))) for a in x),
+    )

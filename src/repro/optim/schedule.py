@@ -1,0 +1,23 @@
+"""Learning-rate schedules."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_with_warmup(
+    step,
+    *,
+    peak_lr: float = 3e-4,
+    warmup_steps: int = 100,
+    total_steps: int = 10_000,
+    min_ratio: float = 0.1,
+):
+    step = jnp.asarray(step, jnp.float32)
+    warm = step / jnp.maximum(1.0, warmup_steps)
+    frac = (step - warmup_steps) / jnp.maximum(
+        1.0, total_steps - warmup_steps
+    )
+    frac = jnp.clip(frac, 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return peak_lr * jnp.where(step < warmup_steps, warm, cos)

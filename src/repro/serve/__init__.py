@@ -1,0 +1,5 @@
+"""Serving substrate: batched prefill/decode engine over the model API."""
+
+from .engine import ServeEngine, Request
+
+__all__ = ["ServeEngine", "Request"]

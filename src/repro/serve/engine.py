@@ -1,0 +1,163 @@
+"""Batched serving engine: request queue → slot-based continuous batching.
+
+Production loop: a fixed decode batch of ``slots``; finished/empty slots are
+refilled from the queue by running a prefill for the incoming prompt and
+splicing its cache into the slot (cache surgery = per-slot
+dynamic_update_slice on the batch axis).  Prefill and decode are separate
+jitted programs (the two compiled artifacts the ``prefill_*`` / ``decode_*``
+dry-run shapes correspond to).
+
+Sampling: greedy or temperature; deterministic per (seed, slot, step).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import ShardingRules
+from repro.models import api as model_api
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (prompt_len,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    # filled by the engine:
+    output: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        params: Any,
+        cfg: ModelConfig,
+        *,
+        slots: int = 4,
+        max_len: int = 512,
+        rules: ShardingRules | None = None,
+        seed: int = 0,
+    ):
+        self.params = params
+        self.cfg = cfg
+        self.slots = slots
+        self.max_len = max_len
+        self.rules = rules
+        self.rng = np.random.default_rng(seed)
+
+        self._decode = jax.jit(
+            lambda p, tok, st: model_api.decode_step(p, tok, cfg, st, rules)
+        )
+        self._prefill = jax.jit(
+            lambda p, batch, st: model_api.prefill(p, batch, cfg, st, rules)
+        )
+        self.state = model_api.init_decode_state(cfg, slots, max_len)
+        self.slot_req: list[Request | None] = [None] * slots
+        self.slot_tokens = np.zeros((slots,), np.int32)
+        self.queue: list[Request] = []
+        self.completed: list[Request] = []
+        self.stats = {"prefill_tokens": 0, "decode_tokens": 0, "steps": 0}
+
+    # -- API --------------------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def run(self, max_steps: int = 1000) -> list[Request]:
+        """Drive until queue + slots drain (or step budget)."""
+        for _ in range(max_steps):
+            self._fill_slots()
+            if all(r is None for r in self.slot_req):
+                break
+            self._decode_once()
+        return self.completed
+
+    # -- internals ----------------------------------------------------------------
+
+    def _fill_slots(self) -> None:
+        for s in range(self.slots):
+            if self.slot_req[s] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            # Prefill this prompt alone (batch=1 prefill, spliced into slot).
+            pcfg_state = model_api.init_decode_state(
+                self.cfg, 1, self.max_len
+            )
+            batch = {
+                "tokens": jnp.asarray(req.prompt[None, :], jnp.int32)
+            }
+            if self.cfg.family == "encdec":
+                batch["frames"] = jnp.zeros(
+                    (1, self.cfg.enc_frames, self.cfg.d_model),
+                    self.cfg.jdtype,
+                )
+            if self.cfg.family == "vlm":
+                batch["patch_embeds"] = jnp.zeros(
+                    (1, self.cfg.n_patches, self.cfg.d_model),
+                    self.cfg.jdtype,
+                )
+            logits, pstate = self._prefill(self.params, batch, pcfg_state)
+            self.state = _splice_state(self.state, pstate, s)
+            tok = self._sample(logits[0, -1], req)
+            req.output.append(int(tok))
+            self.slot_req[s] = req
+            self.slot_tokens[s] = int(tok)
+            self.stats["prefill_tokens"] += len(req.prompt)
+
+    def _decode_once(self) -> None:
+        toks = jnp.asarray(self.slot_tokens[:, None], jnp.int32)
+        logits, self.state = self._decode(self.params, toks, self.state)
+        self.stats["steps"] += 1
+        for s in range(self.slots):
+            req = self.slot_req[s]
+            if req is None:
+                continue
+            tok = self._sample(logits[s, -1], req)
+            req.output.append(int(tok))
+            self.slot_tokens[s] = int(tok)
+            self.stats["decode_tokens"] += 1
+            if len(req.output) >= req.max_new_tokens:
+                req.done = True
+                self.completed.append(req)
+                self.slot_req[s] = None
+
+    def _sample(self, logits: jax.Array, req: Request) -> int:
+        logits = np.asarray(logits, np.float32)
+        if req.temperature <= 0.0:
+            return int(logits.argmax())
+        p = np.exp((logits - logits.max()) / req.temperature)
+        p /= p.sum()
+        return int(self.rng.choice(len(p), p=p))
+
+
+def _splice_state(state: Any, single: Any, slot: int) -> Any:
+    """Copy a batch-1 prefill state into batch slot ``slot``.
+
+    Every leaf whose batch axis we know (dense/MoE caches: axis 1 with
+    leading layer axis; ``pos``: axis 0) gets a dynamic-slice update.  For
+    pytrees with other layouts (rwkv/hybrid states) the structure matches
+    leafwise, so we splice on the axis whose size differs.
+    """
+
+    def splice(dst, src):
+        if dst.ndim == 0:
+            return dst
+        # find the batch axis: the one where dst is larger and src == 1
+        for ax in range(dst.ndim):
+            if src.shape[ax] == 1 and dst.shape[ax] != src.shape[ax]:
+                idx = [0] * dst.ndim
+                idx[ax] = slot
+                return jax.lax.dynamic_update_slice(
+                    dst, src.astype(dst.dtype), tuple(idx)
+                )
+        return dst
+
+    return jax.tree.map(splice, state, single)

@@ -1,0 +1,149 @@
+"""Collective-traffic extraction from lowered/compiled HLO text.
+
+``compiled.cost_analysis()`` reports FLOPs and bytes-accessed but NOT
+collective traffic, so we parse the (post-SPMD) HLO.  XLA prints one
+instruction per line::
+
+    %name = f32[128,1024]{1,0} all-reduce(%operand), replica_groups=...
+
+Operand shapes are not always inlined, so the parser makes two passes:
+pass 1 builds a symbol table ``%name → bytes`` from every definition line;
+pass 2 sums, for each ``all-gather`` / ``all-reduce`` / ``reduce-scatter`` /
+``all-to-all`` / ``collective-permute``, the resolved operand sizes (the
+bytes each device injects into the interconnect), falling back to the
+output size when an operand is unresolvable.  Async ``-start``/``-done``
+pairs are counted once (on the start).
+
+Under SPMD the HLO is the per-device program, so these are per-device bytes
+— exactly the numerator of the collective roofline term.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1,
+    "f8e5m2fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([\d,]*)\]")
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# "%name = <shapes> opcode(" — definition lines.
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*(?P<shapes>[^=]*?)"
+    r"\s(?P<opcode>[\w\-]+)\("
+)
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    operand_bytes: dict[str, int]
+    output_bytes: dict[str, int]
+    counts: dict[str, int]
+
+    @property
+    def total_operand_bytes(self) -> int:
+        return sum(self.operand_bytes.values())
+
+    def summary(self) -> dict:
+        return {
+            "total_bytes": self.total_operand_bytes,
+            "by_op_bytes": dict(self.operand_bytes),
+            "output_bytes": dict(self.output_bytes),
+            "counts": dict(self.counts),
+        }
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    # Pass 1: symbol table.
+    sizes: dict[str, int] = {}
+    defs: list[tuple[str, str, str, str]] = []  # (name, shapes, opcode, line)
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, shapes, opcode = m.group("name"), m.group("shapes"), m.group(
+            "opcode"
+        )
+        sizes[name] = _shape_bytes(shapes)
+        defs.append((name, shapes, opcode, line))
+
+    operand = defaultdict(int)
+    output = defaultdict(int)
+    counts = defaultdict(int)
+    for name, shapes, opcode, line in defs:
+        base = None
+        for op in COLLECTIVE_OPS:
+            if opcode == op or opcode == op + "-start":
+                base = op
+                break
+        if base is None:
+            continue
+        counts[base] += 1
+        output[base] += sizes.get(name, 0)
+        # Operands: the %names inside the call parens.
+        paren = line[line.index(opcode) + len(opcode):]
+        # cut at "), " — keep it simple: first balanced close
+        depth = 0
+        args = []
+        for ch in paren:
+            if ch == "(":
+                depth += 1
+                if depth == 1:
+                    continue
+            if ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            if depth >= 1:
+                args.append(ch)
+        arg_text = "".join(args)
+        inline = _shape_bytes(arg_text)
+        if inline:
+            operand[base] += inline
+        else:
+            resolved = sum(
+                sizes.get(nm, 0) for nm in _OPERAND_RE.findall(arg_text)
+            )
+            operand[base] += resolved if resolved else sizes.get(name, 0)
+    return CollectiveStats(dict(operand), dict(output), dict(counts))
+
+
+def flops_and_bytes(cost_analysis: dict | None) -> tuple[float, float]:
+    """(flops, bytes accessed) from ``compiled.cost_analysis()``."""
+    if not cost_analysis:
+        return 0.0, 0.0
+    ca = cost_analysis
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    return flops, byts

@@ -1,0 +1,97 @@
+"""Three-term roofline model for the dry-run artifacts (TPU v5e targets).
+
+    compute    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory     = HLO_bytes / (chips × HBM_bw)
+    collective = collective_bytes / (chips × link_bw)
+
+``cost_analysis`` on an SPMD-compiled executable reports *per-device*
+numbers, so ``per_device=True`` (the default for dry-run artifacts) skips
+the chip division.  MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) gives
+the useful-compute ratio that catches remat/redundancy waste.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s per link (~per chip, 1 concurrent link)
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float
+    bytes_accessed: float
+    collective_bytes: float
+    model_flops: float = 0.0
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (per-device model flops vs compiled)."""
+        if self.flops <= 0:
+            return 0.0
+        return self.model_flops / self.flops
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the dominant-resource bound that is useful compute:
+        (model_flops / peak) / bound_time — 1.0 means the step runs exactly
+        at the hardware bound with zero waste."""
+        if self.bound_time_s <= 0:
+            return 0.0
+        return (self.model_flops / PEAK_FLOPS) / self.bound_time_s
+
+    def to_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "flops": self.flops,
+            "bytes_accessed": self.bytes_accessed,
+            "collective_bytes": self.collective_bytes,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def roofline(
+    flops: float,
+    bytes_accessed: float,
+    collective_bytes: float,
+    *,
+    chips: int = 1,
+    per_device: bool = True,
+    model_flops: float = 0.0,
+    peak_flops: float = PEAK_FLOPS,
+    hbm_bw: float = HBM_BW,
+    link_bw: float = ICI_BW,
+) -> RooflineTerms:
+    div = 1 if per_device else chips
+    return RooflineTerms(
+        compute_s=flops / div / peak_flops,
+        memory_s=bytes_accessed / div / hbm_bw,
+        collective_s=collective_bytes / div / link_bw,
+        flops=flops / div,
+        bytes_accessed=bytes_accessed / div,
+        collective_bytes=collective_bytes / div,
+        model_flops=model_flops,
+    )

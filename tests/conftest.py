@@ -1,0 +1,22 @@
+"""Shared test fixtures.
+
+NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+single real device.  Multi-device tests spawn subprocesses that set
+``--xla_force_host_platform_device_count`` themselves (see _subproc.py).
+"""
+
+import os
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    import numpy as np
+
+    return np.random.RandomState(0)

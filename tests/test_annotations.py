@@ -1,0 +1,109 @@
+"""Annotation DSL: parsing, region evaluation, error handling, properties."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.annotations import (
+    Annotation,
+    AnnotationError,
+    parse,
+)
+from repro.core.ndrange import Region
+
+
+class TestParsing:
+    def test_paper_stencil(self):
+        a = parse("global i => read A[i-1:i+1], write B[i]")
+        assert a.arrays() == ("A", "B")
+        assert a.stmt_for("A").mode == "read"
+        assert a.stmt_for("B").mode == "write"
+        assert a.var_axes() == {"i": ("global", 0)}
+
+    def test_paper_matmul(self):
+        a = parse("global [i, j] => read A[i,:], read B[:,j], write C[i,j]")
+        assert a.stmt_for("A").indices[1].is_point is False
+        assert a.stmt_for("C").indices[0].is_point
+
+    def test_paper_reduce(self):
+        a = parse("global [i, j] => read A[i,j], reduce(+) sum[i]")
+        s = a.stmt_for("sum")
+        assert s.mode == "reduce" and s.reduce_op == "+"
+        assert s.writes and not s.reads
+
+    def test_all_reduce_ops(self):
+        for op in ("+", "*", "min", "max"):
+            a = parse(f"global i => reduce({op}) s[i]")
+            assert a.stmt_for("s").reduce_op == op
+
+    def test_block_local_bindings(self):
+        a = parse("block b, local l => read A[b], write B[l]")
+        assert a.var_axes() == {"b": ("block", 0), "l": ("local", 0)}
+
+    def test_scaled_indices(self):
+        a = parse("global i => read A[2*i:2*i+1], write B[i]")
+        env = {"i": (0, 4)}
+        assert a.stmt_for("A").region(env, (100,)) == Region.of((0, 8))
+
+    @pytest.mark.parametrize("bad", [
+        "global i => bogus A[i]",
+        "global i => read A[i",
+        "read A[i]",
+        "global i => reduce(^) s[i]",
+        "global i => read A[j]",  # unbound var
+        "global i => read A[i], read A[i]",  # duplicate array
+        "global i => read A[i*i]",  # nonlinear
+        "global [i, i] => read A[i]",  # duplicate binding
+    ])
+    def test_errors(self, bad):
+        with pytest.raises(AnnotationError):
+            parse(bad)
+
+
+class TestRegions:
+    def test_stencil_region(self):
+        a = parse("global i => read A[i-1:i+1], write B[i]")
+        env = {"i": (10, 20)}
+        assert a.stmt_for("A").region(env, (100,)) == Region.of((9, 21))
+        assert a.stmt_for("B").region(env, (100,)) == Region.of((10, 20))
+
+    def test_clipping_at_bounds(self):
+        a = parse("global i => read A[i-1:i+1], write B[i]")
+        env = {"i": (0, 10)}
+        assert a.stmt_for("A").region(env, (100,)) == Region.of((0, 11))
+        env = {"i": (95, 100)}
+        assert a.stmt_for("A").region(env, (100,)) == Region.of((94, 100))
+
+    def test_open_slice_means_extent(self):
+        a = parse("global [i, j] => read B[:,j]")
+        env = {"i": (0, 4), "j": (2, 6)}
+        assert a.stmt_for("B").region(env, (64, 32)) == Region.of(
+            (0, 64), (2, 6)
+        )
+
+    def test_env_for_superblock_blocks(self):
+        a = parse("block b => read A[b]")
+        from repro.core.superblock import Superblock
+
+        sb = Superblock(0, Region.of((64, 128)), 0)
+        env = a.env_for_superblock(sb, block_shape=(32,))
+        assert env["b"] == (2, 4)
+
+    @given(
+        lo_off=st.integers(-4, 0), hi_off=st.integers(0, 4),
+        start=st.integers(0, 50), width=st.integers(1, 30),
+        extent=st.integers(40, 120),
+    )
+    @settings(max_examples=200, deadline=None)
+    def test_region_contains_every_thread_access(
+        self, lo_off, hi_off, start, width, extent
+    ):
+        """Property: the computed access region contains A[i+lo : i+hi]
+        for every thread i in the superblock (the planner's soundness)."""
+        src = f"global i => read A[i{lo_off:+d}:i{hi_off:+d}]"
+        a = parse(src)
+        env = {"i": (start, start + width)}
+        region = a.stmt_for("A").region(env, (extent,))
+        for i in range(start, start + width):
+            for j in range(i + lo_off, i + hi_off + 1):
+                if 0 <= j < extent:
+                    assert region.contains_point((j,)), (i, j, region)

@@ -1,0 +1,78 @@
+"""Chunk distributions: coverage, queries, partition specs."""
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.distributions import (
+    BlockDist,
+    ColDist,
+    ReplicatedDist,
+    RowDist,
+    StencilDist,
+    TileDist,
+)
+from repro.core.ndrange import Region, covers
+
+
+class TestCoverage:
+    @given(n=st.integers(1, 500), cs=st.integers(1, 100),
+           nd=st.integers(1, 8))
+    @settings(max_examples=150, deadline=None)
+    def test_block_covers(self, n, cs, nd):
+        chunks = BlockDist(cs).chunks((n,), nd)
+        assert covers(Region.from_shape((n,)), [c.region for c in chunks])
+        assert all(0 <= c.owner < nd for c in chunks)
+
+    @given(rows=st.integers(1, 100), cols=st.integers(1, 100),
+           nd=st.integers(1, 8))
+    @settings(max_examples=100, deadline=None)
+    def test_row_col_cover(self, rows, cols, nd):
+        dom = Region.from_shape((rows, cols))
+        for dist in (RowDist(), ColDist()):
+            chunks = dist.chunks((rows, cols), nd)
+            assert covers(dom, [c.region for c in chunks])
+
+    @given(n=st.integers(4, 300), cs=st.integers(2, 64),
+           halo=st.integers(1, 3))
+    @settings(max_examples=100, deadline=None)
+    def test_stencil_halo_overlap(self, n, cs, halo):
+        chunks = StencilDist(cs, halo).chunks((n,), 4)
+        assert covers(Region.from_shape((n,)), [c.region for c in chunks])
+        for c in chunks:
+            interior = c.interior
+            assert c.region.contains(interior)
+            # halo extends at most `halo` beyond interior, clipped to domain
+            lo_i, hi_i = interior.intervals[0]
+            lo_o, hi_o = c.region.intervals[0]
+            assert lo_i - lo_o <= halo and hi_o - hi_i <= halo
+
+
+class TestQueries:
+    def test_find_enclosing_prefers_smallest(self):
+        d = StencilDist(32, 2)
+        region = Region.of((33, 40))
+        c = d.find_enclosing(region, (128,), 4)
+        assert c is not None
+        assert c.region.contains(region)
+
+    def test_query_intersecting(self):
+        d = RowDist()
+        hits = d.query(Region.of((30, 70), (0, 10)), (100, 10), 4)
+        assert [c.index for c in hits] == [1, 2]
+
+    def test_replicated(self):
+        d = ReplicatedDist()
+        chunks = d.chunks((10, 10), 3)
+        assert len(chunks) == 3
+        assert all(c.region == Region.from_shape((10, 10)) for c in chunks)
+        assert d.replicated
+
+
+class TestPartitionSpecs:
+    def test_specs(self):
+        axes = ("data",)
+        assert RowDist().partition_spec(axes) == ("data",)
+        assert ColDist().partition_spec(axes) == (None, "data")
+        assert ReplicatedDist().partition_spec(axes) == ()
+        assert BlockDist(4, axis=1).partition_spec(axes) == (None, "data")
+        assert TileDist((8, 8)).partition_spec(("a", "b")) == ("a", "b")
+        assert StencilDist(16, 1).partition_spec(axes) == ("data",)

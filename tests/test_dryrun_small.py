@@ -1,0 +1,69 @@
+"""Miniature dry-run: lower+compile on a small mesh in a subprocess —
+validates the dryrun machinery end-to-end without the 512-device cost."""
+
+import pytest
+
+from _subproc import run_with_devices
+
+
+@pytest.mark.slow
+def test_small_mesh_train_and_decode_lowering():
+    out = run_with_devices("""
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import get_smoke_config
+from repro.launch.rules import rules_for
+from repro.dist.sharding import tree_specs
+from repro.models import api as model_api
+from repro.train.train_loop import init_train_state, make_train_step
+from repro.utils.hlo_analysis import collective_stats
+
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+
+for arch in ("phi3-mini-3.8b", "granite-moe-1b-a400m", "rwkv6-3b"):
+    cfg = get_smoke_config(arch).scaled(
+        d_model=64, d_ff=128 if arch != "granite-moe-1b-a400m" else 32)
+    rules = rules_for(cfg, mesh, "tp", global_batch=8)
+    # train
+    step = make_train_step(cfg, rules, mesh, donate=False)
+    state = jax.eval_shape(lambda: init_train_state(jax.random.key(0), cfg))
+    batch = {"tokens": jax.ShapeDtypeStruct((8, 32), jnp.int32)}
+    comp = step.lower(state, batch).compile()
+    ca = comp.cost_analysis()
+    assert ca.get("flops", 0) > 0, arch
+    stats = collective_stats(comp.as_text())
+    assert stats.total_operand_bytes > 0, (arch, "expected collectives")
+    # decode
+    p_specs = tree_specs(rules, model_api.params_logical_axes(cfg))
+    s_specs = tree_specs(rules, model_api.state_logical_axes(cfg))
+    params = jax.eval_shape(lambda: model_api.init_params(
+        jax.random.key(0), cfg))
+    st = jax.eval_shape(lambda: model_api.init_decode_state(cfg, 8, 64))
+    named = lambda t: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), t,
+        is_leaf=lambda x: isinstance(x, P))
+    fn = jax.jit(
+        lambda p, t, s: model_api.decode_step(p, t, cfg, s, rules),
+        in_shardings=(named(p_specs),
+                      NamedSharding(mesh, rules.spec(("batch", None))),
+                      named(s_specs)))
+    comp2 = fn.lower(params, jax.ShapeDtypeStruct((8, 1), jnp.int32),
+                     st).compile()
+    assert comp2.cost_analysis().get("flops", 0) > 0
+    print(arch, "LOWERED")
+print("DRYRUN-SMALL-OK")
+""", n_devices=8, timeout=560)
+    assert "DRYRUN-SMALL-OK" in out
+
+
+def test_production_mesh_shapes():
+    """make_production_mesh is importable and pure (no device usage here —
+    just validate the declared geometry via the function source contract)."""
+    from repro.launch import mesh as mesh_mod
+
+    import inspect
+
+    src = inspect.getsource(mesh_mod.make_production_mesh)
+    assert "(2, 16, 16)" in src and "(16, 16)" in src
+    assert '"pod", "data", "model"' in src

@@ -1,0 +1,152 @@
+"""Region algebra: unit + hypothesis property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ndrange import (
+    Affine,
+    Region,
+    cover_exactly,
+    covers,
+    split_extent,
+    tile_region,
+)
+
+intervals = st.tuples(
+    st.integers(-50, 50), st.integers(0, 30)
+).map(lambda t: (t[0], t[0] + t[1]))
+
+
+def regions(ndim):
+    return st.tuples(*([intervals] * ndim)).map(Region)
+
+
+# ---------------------------------------------------------------------------
+# Affine
+# ---------------------------------------------------------------------------
+
+
+class TestAffine:
+    def test_algebra(self):
+        e = Affine.var("i", 2) + Affine.var("j", -1) + 5
+        assert e.evaluate({"i": 3, "j": 4}) == 2 * 3 - 4 + 5
+
+    def test_bounds_exact_small(self):
+        e = Affine.var("i", 2) - Affine.var("j", 3) + 1
+        env = {"i": (0, 4), "j": (1, 3)}
+        lo, hi = e.bounds(env)
+        vals = [
+            e.evaluate({"i": i, "j": j})
+            for i in range(0, 4)
+            for j in range(1, 3)
+        ]
+        assert lo == min(vals) and hi == max(vals)
+
+    @given(
+        ci=st.integers(-5, 5), cj=st.integers(-5, 5), c=st.integers(-20, 20),
+        i0=st.integers(-10, 10), iw=st.integers(1, 8),
+        j0=st.integers(-10, 10), jw=st.integers(1, 8),
+    )
+    @settings(max_examples=200, deadline=None)
+    def test_bounds_match_bruteforce(self, ci, cj, c, i0, iw, j0, jw):
+        e = Affine.var("i", ci) + Affine.var("j", cj) + c
+        env = {"i": (i0, i0 + iw), "j": (j0, j0 + jw)}
+        lo, hi = e.bounds(env)
+        vals = [
+            e.evaluate({"i": i, "j": j})
+            for i in range(i0, i0 + iw)
+            for j in range(j0, j0 + jw)
+        ]
+        assert lo == min(vals)
+        assert hi == max(vals)
+
+    def test_empty_range_raises(self):
+        with pytest.raises(ValueError):
+            Affine.var("i").bounds({"i": (3, 3)})
+
+
+# ---------------------------------------------------------------------------
+# Region
+# ---------------------------------------------------------------------------
+
+
+class TestRegion:
+    def test_basic(self):
+        r = Region.of((0, 4), (2, 6))
+        assert r.shape == (4, 4)
+        assert r.volume == 16
+        assert not r.is_empty
+
+    def test_intersect_contains(self):
+        a = Region.of((0, 10), (0, 10))
+        b = Region.of((5, 15), (2, 8))
+        i = a.intersect(b)
+        assert i == Region.of((5, 10), (2, 8))
+        assert a.contains(i) and b.contains(i)
+
+    def test_relative_to(self):
+        chunk = Region.of((100, 200))
+        acc = Region.of((150, 160))
+        assert acc.relative_to(chunk) == Region.of((50, 60))
+
+    @given(a=regions(2), b=regions(2))
+    @settings(max_examples=200, deadline=None)
+    def test_intersection_commutes_and_bounded(self, a, b):
+        i1, i2 = a.intersect(b), b.intersect(a)
+        assert i1.volume == i2.volume
+        assert i1.volume <= min(a.volume, b.volume)
+        if not i1.is_empty:
+            assert a.contains(i1) and b.contains(i1)
+
+    @given(a=regions(2))
+    @settings(max_examples=100, deadline=None)
+    def test_self_intersection_identity(self, a):
+        assert a.intersect(a).volume == a.volume
+
+    @given(a=regions(2), b=regions(2))
+    @settings(max_examples=100, deadline=None)
+    def test_hull_contains_both(self, a, b):
+        h = a.hull(b)
+        assert h.contains(a) and h.contains(b)
+
+    @given(a=regions(3), dx=st.integers(-5, 5), dy=st.integers(-5, 5),
+           dz=st.integers(-5, 5))
+    @settings(max_examples=100, deadline=None)
+    def test_shift_roundtrip(self, a, dx, dy, dz):
+        assert a.shift((dx, dy, dz)).shift((-dx, -dy, -dz)) == a
+
+
+# ---------------------------------------------------------------------------
+# Decomposition
+# ---------------------------------------------------------------------------
+
+
+class TestDecomposition:
+    @given(extent=st.integers(1, 200), parts=st.integers(1, 17))
+    @settings(max_examples=200, deadline=None)
+    def test_split_extent_covers(self, extent, parts):
+        segs = split_extent(extent, parts)
+        assert len(segs) == parts
+        assert segs[0][0] == 0 and segs[-1][1] == extent
+        for (a0, a1), (b0, b1) in zip(segs, segs[1:]):
+            assert a1 == b0
+        sizes = [b - a for a, b in segs]
+        assert max(sizes) - min(sizes) <= 1
+
+    @given(
+        w=st.integers(1, 40), h=st.integers(1, 40),
+        tw=st.integers(1, 15), th=st.integers(1, 15),
+    )
+    @settings(max_examples=200, deadline=None)
+    def test_tiles_cover_exactly(self, w, h, tw, th):
+        dom = Region.from_shape((w, h))
+        tiles = tile_region(dom, (tw, th))
+        assert cover_exactly(dom, tiles)
+
+    def test_covers_with_overlap(self):
+        dom = Region.from_shape((10,))
+        parts = [Region.of((0, 6)), Region.of((4, 10))]
+        assert covers(dom, parts)
+        assert not cover_exactly(dom, parts)
+        assert not covers(dom, [Region.of((0, 6)), Region.of((7, 10))])

@@ -1,0 +1,138 @@
+"""Sharding rules (incl. planner bridge) + serving engine."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, get_smoke_config
+from repro.dist.sharding import (
+    ShardingRules,
+    derive_rules_from_plan,
+    dp_rules,
+    tp_rules,
+)
+from repro.models import init_params
+from repro.serve.engine import Request, ServeEngine
+
+
+class TestShardingRules:
+    def test_spec_basic(self):
+        r = tp_rules(data=("pod", "data"))
+        assert r.spec(("batch", "seq", "d_model")) == P(
+            ("pod", "data"), None, None
+        )
+        assert r.spec(("d_model", "heads")) == P(None, "model")
+
+    def test_spec_dedupes_repeated_axis(self):
+        r = ShardingRules.of(a="model", b="model")
+        assert r.spec(("a", "b")) == P("model", None)
+
+    def test_dp_rules_replicate_weights(self):
+        r = dp_rules()
+        assert r.spec(("d_model", "heads")) == P(None, None)
+        assert r.spec(("batch", "seq")) == P(("pod", "data", "model"), None)
+
+    def test_planner_bridge_matmul(self):
+        """The paper's matmul annotation must derive Megatron-style specs:
+        A row-sharded by the batch-grid axis, B replicated (slice read),
+        C row-sharded."""
+        specs = derive_rules_from_plan(
+            "global [i, j] => read A[i,:], read B[:,j], write C[i,j]",
+            grid_axis_names=("batch", "heads"),
+            grid_axis_mesh={"batch": "data", "heads": "model"},
+            array_ranks={"A": 2, "B": 2, "C": 2},
+        )
+        assert specs["A"] == P("data", None)
+        assert specs["B"] == P(None, "model")
+        assert specs["C"] == P("data", "model")
+
+    def test_planner_bridge_stencil_replicates_sliced(self):
+        specs = derive_rules_from_plan(
+            "global i => read inp[i-1:i+1], write out[i]",
+            grid_axis_names=("batch",),
+            grid_axis_mesh={"batch": "data"},
+            array_ranks={"inp": 1, "out": 1},
+        )
+        # slice access (halo) cannot be point-sharded → planner replicates /
+        # HALO-lowers it; the point write stays sharded.
+        assert specs["inp"] == P(None)
+        assert specs["out"] == P("data")
+
+
+class TestRulesFor:
+    def test_divisibility_fallbacks(self):
+        import os
+        # Mesh construction requires ≥256 devices: emulate via fake mesh by
+        # checking the pure logic through a tiny mesh.
+        mesh = jax.make_mesh(
+            (1, 1), ("data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 2,
+        )
+        from repro.launch.rules import rules_for
+
+        cfg = get_config("granite-moe-1b-a400m")
+        r = rules_for(cfg, mesh, "tp", global_batch=256)
+        # model axis size 1 → everything divisible; smoke of the API
+        assert r.get("batch") == ("data",)
+
+    def test_fit_batch_axes(self):
+        from repro.launch.rules import fit_batch_axes
+
+        sizes = {"pod": 2, "data": 4}
+        assert fit_batch_axes(sizes, 8, ("pod", "data")) == ("pod", "data")
+        assert fit_batch_axes(sizes, 2, ("pod", "data")) == ("pod",)
+        assert fit_batch_axes(sizes, 1, ("pod", "data")) is None
+        assert fit_batch_axes(sizes, 6, ("pod", "data")) == ("pod",)
+
+
+class TestServeEngine:
+    def test_engine_completes_all_requests(self):
+        cfg = get_smoke_config("phi3-mini-3.8b")
+        params = init_params(jax.random.key(0), cfg)
+        engine = ServeEngine(params, cfg, slots=2, max_len=64)
+        rng = np.random.default_rng(0)
+        for rid in range(5):
+            engine.submit(Request(
+                rid=rid,
+                prompt=rng.integers(0, cfg.vocab, 12).astype(np.int32),
+                max_new_tokens=6,
+            ))
+        done = engine.run()
+        assert len(done) == 5
+        assert all(len(r.output) == 6 for r in done)
+        assert engine.stats["decode_tokens"] > 0
+
+    def test_engine_greedy_matches_reference(self):
+        """Continuous-batched greedy decode == one-request-at-a-time decode."""
+        from repro.models import decode_step, prefill
+        from repro.models.api import init_decode_state
+
+        cfg = get_smoke_config("gemma-2b")
+        params = init_params(jax.random.key(1), cfg)
+        rng = np.random.default_rng(1)
+        prompts = [rng.integers(0, cfg.vocab, 10).astype(np.int32)
+                   for _ in range(3)]
+
+        # reference: sequential single-slot decode
+        ref_outputs = []
+        for p in prompts:
+            state = init_decode_state(cfg, 1, 64)
+            logits, state = prefill(
+                params, {"tokens": jnp.asarray(p[None])}, cfg, state
+            )
+            toks = [int(jnp.argmax(logits[0, -1]))]
+            for _ in range(4):
+                logits, state = decode_step(
+                    params, jnp.asarray([[toks[-1]]], jnp.int32), cfg, state
+                )
+                toks.append(int(jnp.argmax(logits[0, -1])))
+            ref_outputs.append(toks)
+
+        engine = ServeEngine(params, cfg, slots=3, max_len=64)
+        for rid, p in enumerate(prompts):
+            engine.submit(Request(rid=rid, prompt=p, max_new_tokens=5))
+        done = sorted(engine.run(), key=lambda r: r.rid)
+        for r, want in zip(done, ref_outputs):
+            assert r.output == want, (r.rid, r.output, want)

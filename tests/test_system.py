@@ -1,0 +1,159 @@
+"""End-to-end system tests: the paper's benchmark pipelines run through the
+Lightning Context (plan → launch → kernels) and match numpy references."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    BlockDist,
+    BlockWork,
+    Context,
+    KernelDef,
+    ReplicatedDist,
+    RowDist,
+    StencilDist,
+)
+from repro.kernels import (
+    cluster_sums,
+    hotspot_step,
+    kmeans_assign_reduce,
+)
+from repro.kernels.coclustering.ref import coclustering_iteration_ref
+
+RNG = np.random.RandomState(0)
+
+
+class TestStencilPipeline:
+    def test_ten_iterations_like_paper_fig9(self):
+        """The paper's host-code example: 10 stencil launches with buffer
+        swapping, sequential consistency via chunk conflicts."""
+        ctx = Context()
+        n = 256
+
+        def body(views, info):
+            x = views["input"]
+            left = jnp.concatenate([jnp.zeros((1,), x.dtype), x[:-1]])
+            right = jnp.concatenate([x[1:], jnp.zeros((1,), x.dtype)])
+            return {"output": (left + x + right) / 3.0}
+
+        k = KernelDef.define(
+            "stencil", body,
+            "global i => read input[i-1:i+1], write output[i]",
+        )
+        x_np = RNG.rand(n).astype(np.float32)
+        a = ctx.array(x_np, dist=StencilDist(64, 1), name="input")
+        b = ctx.zeros((n,), dist=StencilDist(64, 1), name="output")
+        for _ in range(10):
+            res = ctx.launch(k, grid=(n,), args={"input": a, "output": b},
+                             work_dist=BlockWork(64))
+            a, b = res["output"], a
+
+        want = x_np.copy()
+        for _ in range(10):
+            pad = np.pad(want, 1)
+            want = (pad[:-2] + pad[1:-1] + pad[2:]) / 3.0
+        np.testing.assert_allclose(a.to_numpy(), want, rtol=1e-5, atol=1e-6)
+        assert len(ctx.records) == 10
+
+
+class TestKMeansPipeline:
+    def test_kmeans_converges(self):
+        """Paper K-Means: assignment kernel + reduce(+) centroid update,
+        5 iterations; inertia must decrease monotonically-ish."""
+        n, k, f = 4096, 8, 4
+        centers = RNG.rand(k, f).astype(np.float32) * 10
+        pts = (centers[RNG.randint(0, k, n)]
+               + RNG.randn(n, f).astype(np.float32) * 0.3)
+        cen = pts[RNG.choice(n, k, replace=False)].copy()
+
+        def inertia(c):
+            d2 = ((pts[:, None] - c[None]) ** 2).sum(-1)
+            return d2.min(1).sum()
+
+        prev = inertia(cen)
+        for _ in range(5):
+            sums, counts = kmeans_assign_reduce(
+                jnp.asarray(pts), jnp.asarray(cen), block=1024
+            )
+            cen = np.asarray(sums) / np.maximum(np.asarray(counts), 1)[:, None]
+            cur = inertia(cen)
+            assert cur <= prev * 1.001
+            prev = cur
+
+
+class TestHotSpotPipeline:
+    def test_converges_to_ambient_without_power(self):
+        t = jnp.full((64, 128), 120.0)
+        p = jnp.zeros((64, 128))
+        for _ in range(200):
+            t = hotspot_step(t, p, block_rows=32)
+        # thermal model relaxes toward ambient (80.0)
+        assert abs(float(t.mean()) - 80.0) < 2.0
+
+
+class TestCoClusteringApp:
+    def test_iterations_reduce_objective(self):
+        """CGC co-clustering (paper §4.6): I-divergence objective must not
+        increase across iterations."""
+        n, m, R, C = 128, 96, 4, 3
+        # planted block structure
+        row_gt = RNG.randint(0, R, n)
+        col_gt = RNG.randint(0, C, m)
+        means = RNG.rand(R, C) * 5 + 0.5
+        z = means[row_gt][:, col_gt] * (1 + 0.05 * RNG.randn(n, m))
+        z = np.abs(z).astype(np.float32)
+
+        ra = RNG.randint(0, R, n).astype(np.int32)
+        ca = RNG.randint(0, C, m).astype(np.int32)
+
+        def objective(ra_, ca_):
+            cs = np.asarray(cluster_sums(jnp.asarray(z), jnp.asarray(ra_),
+                                         jnp.asarray(ca_), R, C))
+            rc = np.bincount(ra_, minlength=R).astype(np.float64)
+            cc = np.bincount(ca_, minlength=C).astype(np.float64)
+            sizes = rc[:, None] * cc[None, :] + 1e-8
+            avg = cs / sizes + 1e-8
+            zz = z + 1e-9
+            expect = avg[ra_][:, ca_]
+            return float((zz * np.log(zz / expect) - zz + expect).sum())
+
+        prev = objective(ra, ca)
+        for _ in range(6):
+            ra2, ca2 = coclustering_iteration_ref(
+                jnp.asarray(z), jnp.asarray(ra), jnp.asarray(ca), R, C
+            )
+            ra, ca = np.asarray(ra2), np.asarray(ca2)
+            cur = objective(ra, ca)
+            assert cur <= prev * 1.01, (prev, cur)
+            prev = cur
+
+
+class TestHloAnalysis:
+    def test_collective_parser_on_real_hlo(self):
+        from repro.utils.hlo_analysis import collective_stats
+
+        hlo = """
+HloModule test
+%add { ... }
+ENTRY %main {
+  %p0 = f32[64,128]{1,0} parameter(0)
+  %fusion.1 = f32[64,128]{1,0} fusion(%p0), kind=kLoop
+  %all-reduce.0 = f32[64,128]{1,0} all-reduce(%fusion.1), to_apply=%add
+  %all-gather.0 = f32[128,128]{1,0} all-gather(%all-reduce.0), dimensions={0}
+  ROOT %out = f32[128,128]{1,0} copy(%all-gather.0)
+}
+"""
+        stats = collective_stats(hlo)
+        assert stats.counts == {"all-reduce": 1, "all-gather": 1}
+        assert stats.operand_bytes["all-reduce"] == 64 * 128 * 4
+        assert stats.operand_bytes["all-gather"] == 64 * 128 * 4
+        assert stats.output_bytes["all-gather"] == 128 * 128 * 4
+
+    def test_roofline_terms(self):
+        from repro.utils.roofline import roofline
+
+        t = roofline(1e15, 1e12, 1e10, model_flops=5e14)
+        assert t.dominant == "compute"
+        assert 0 < t.roofline_fraction <= 1.0
+        assert t.useful_flops_ratio == 0.5
