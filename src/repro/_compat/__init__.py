@@ -1,0 +1,6 @@
+"""Compatibility shims for optional third-party dependencies.
+
+The only policy: never make a hard dependency out of something the test
+suite can approximate.  Each shim is import-gated by the caller (see
+``tests/conftest.py``) so the real package always wins when installed.
+"""

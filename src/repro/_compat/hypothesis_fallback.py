@@ -1,0 +1,173 @@
+"""Minimal, dependency-free stand-in for the ``hypothesis`` API we use.
+
+When the real `hypothesis <https://hypothesis.readthedocs.io>`_ package is
+installed it is always preferred (``tests/conftest.py`` only installs this
+fallback on ``ModuleNotFoundError``).  This module covers exactly the
+surface the test suite uses — ``given``/``settings``/``assume`` and the
+``integers``/``tuples``/``lists``/``sampled_from``/``booleans``/``just``
+strategies with ``.map``/``.filter`` — as seeded random sampling:
+
+* deterministic per test (seeded from the test's qualified name), so runs
+  are reproducible without a database;
+* no shrinking — on failure the raised ``AssertionError`` carries the
+  falsifying example verbatim instead;
+* ``pytest`` fixture collection is preserved by stripping the generated
+  parameters from the wrapper's signature.
+
+Install with :func:`install`, which registers ``hypothesis`` and
+``hypothesis.strategies`` in ``sys.modules``.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+import zlib
+from typing import Any, Callable
+
+_DEFAULT_MAX_EXAMPLES = 100
+_SETTINGS_ATTR = "_hypothesis_fallback_settings"
+_MAX_FILTER_TRIES = 1000
+
+
+class UnsatisfiedAssumption(Exception):
+    """Raised by :func:`assume` to discard the current example."""
+
+
+def assume(condition: Any) -> bool:
+    if not condition:
+        raise UnsatisfiedAssumption()
+    return True
+
+
+class SearchStrategy:
+    """A strategy is just a draw function ``rng -> value``."""
+
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self._draw = draw
+
+    def map(self, fn: Callable[[Any], Any]) -> "SearchStrategy":
+        return SearchStrategy(lambda rng: fn(self._draw(rng)))
+
+    def filter(self, pred: Callable[[Any], bool]) -> "SearchStrategy":
+        def draw(rng: random.Random) -> Any:
+            for _ in range(_MAX_FILTER_TRIES):
+                value = self._draw(rng)
+                if pred(value):
+                    return value
+            raise UnsatisfiedAssumption("filter predicate never satisfied")
+
+        return SearchStrategy(draw)
+
+    def example(self) -> Any:
+        return self._draw(random.Random(0))
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+def just(value: Any) -> SearchStrategy:
+    return SearchStrategy(lambda rng: value)
+
+
+def sampled_from(elements) -> SearchStrategy:
+    pool = list(elements)
+    return SearchStrategy(lambda rng: rng.choice(pool))
+
+
+def tuples(*strategies: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: tuple(s._draw(rng) for s in strategies)
+    )
+
+
+def lists(
+    elements: SearchStrategy, *, min_size: int = 0, max_size: int = 10
+) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: [
+            elements._draw(rng)
+            for _ in range(rng.randint(min_size, max_size))
+        ]
+    )
+
+
+def settings(**kwargs: Any) -> Callable:
+    """Records ``max_examples`` (etc.) on the decorated function; other
+    hypothesis knobs (``deadline``, …) are accepted and ignored."""
+
+    def decorate(fn: Callable) -> Callable:
+        setattr(fn, _SETTINGS_ATTR, dict(kwargs))
+        return fn
+
+    return decorate
+
+
+def given(**param_strategies: SearchStrategy) -> Callable:
+    def decorate(fn: Callable) -> Callable:
+        @functools.wraps(fn)
+        def wrapper(*args: Any, **kwargs: Any) -> None:
+            conf = (
+                getattr(wrapper, _SETTINGS_ATTR, None)
+                or getattr(fn, _SETTINGS_ATTR, None)
+                or {}
+            )
+            max_examples = conf.get("max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(max_examples):
+                drawn = {
+                    name: strat._draw(rng)
+                    for name, strat in param_strategies.items()
+                }
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except UnsatisfiedAssumption:
+                    continue
+                except Exception as exc:
+                    raise AssertionError(
+                        f"falsifying example for {fn.__qualname__}: "
+                        f"{drawn!r}"
+                    ) from exc
+
+        # Hide the generated parameters from pytest's fixture resolution.
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(
+            parameters=[
+                p for name, p in sig.parameters.items()
+                if name not in param_strategies
+            ]
+        )
+        return wrapper
+
+    return decorate
+
+
+def install() -> None:
+    """Register this fallback as ``hypothesis``/``hypothesis.strategies``."""
+    if "hypothesis" in sys.modules:  # real package (or prior install) wins
+        return
+    hyp = types.ModuleType("hypothesis")
+    strat = types.ModuleType("hypothesis.strategies")
+    for name in (
+        "integers", "booleans", "just", "sampled_from", "tuples", "lists",
+        "SearchStrategy",
+    ):
+        setattr(strat, name, globals()[name])
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.strategies = strat
+    hyp.HealthCheck = types.SimpleNamespace(
+        too_slow=None, filter_too_much=None, data_too_large=None
+    )
+    hyp.__is_repro_fallback__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = strat

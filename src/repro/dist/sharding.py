@@ -1,0 +1,248 @@
+"""Logical-axis sharding rules and the planner → partition-spec bridge.
+
+A :class:`ShardingRules` is a mapping from *logical* array axes (``batch``,
+``seq``, ``heads``, ``d_ff``, …) to mesh axes of the production
+``("pod", "data", "model")`` mesh.  Model code never names mesh axes: every
+weight/activation carries a tuple of logical axis names, and the rules turn
+that tuple into a :class:`jax.sharding.PartitionSpec` (``.spec``), a whole
+pytree of them (:func:`tree_specs`), or an in-graph sharding constraint
+(:func:`constrain`).
+
+Two presets cover the design space:
+
+* :func:`dp_rules` — the Lightning-faithful baseline: the batch axis is
+  superblock-sharded over every mesh axis, weights are replicated.
+* :func:`tp_rules` — beyond-paper Megatron-style placement: batch over the
+  data axes, head/ffn/vocab/expert dims over ``model``, optimizer state
+  ZeRO-1 sharded over the data axes via the ``zero1`` logical axis.
+
+:func:`derive_rules_from_plan` is the planner bridge.  Lightning kernels
+declare their data-access pattern symbolically (§2.3 of the paper); the same
+annotation that drives superblock planning also determines a legal
+placement: an array dimension indexed by a *point* expression on a grid
+variable can be sharded along that grid axis' mesh axis, while slice/halo
+accesses (``A[i-1:i+1]``, ``B[:,j]`` along the sliced dim) force
+replication, exactly like the planner's gather/halo lowering.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.annotations import Annotation, parse
+
+# A rule value: None (replicated), one mesh axis, or a tuple of mesh axes.
+Axes = Any
+
+# Default mesh-axis names of the production pod mesh.
+MESH_AXES = ("pod", "data", "model")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Immutable logical-axis → mesh-axes table (plus an optional mesh).
+
+    The attached ``mesh`` is only used by :func:`constrain`: sharding
+    constraints need a concrete mesh, and presets built without one (pure
+    rule tables, as in unit tests) simply make ``constrain`` a no-op.
+    """
+
+    table: tuple[tuple[str, Axes], ...] = ()
+    mesh: Mesh | None = None
+
+    # -- constructors -------------------------------------------------------
+
+    @classmethod
+    def of(cls, mesh: Mesh | None = None, **rules: Axes) -> "ShardingRules":
+        return cls(tuple(sorted(rules.items())), mesh)
+
+    def updated(self, **rules: Axes) -> "ShardingRules":
+        d = dict(self.table)
+        d.update(rules)
+        return ShardingRules(tuple(sorted(d.items())), self.mesh)
+
+    def with_mesh(self, mesh: Mesh | None) -> "ShardingRules":
+        return ShardingRules(self.table, mesh)
+
+    # -- queries ------------------------------------------------------------
+
+    def get(self, logical_axis: str, default: Axes = None) -> Axes:
+        return dict(self.table).get(logical_axis, default)
+
+    def spec(self, logical_axes: Sequence[str | None]) -> P:
+        """PartitionSpec for one array given its logical axis names.
+
+        ``None`` entries (dims with no logical meaning) stay unsharded.  A
+        mesh axis may appear at most once in a spec: repeated occurrences
+        (two logical axes mapped to the same mesh axis, e.g. ``d_model`` and
+        ``heads`` both on ``model``) are deduped left-to-right, later ones
+        falling back to replicated — the same rule GSPMD itself enforces.
+        """
+        d = dict(self.table)
+        used: set[str] = set()
+        entries: list[Axes] = []
+        for name in logical_axes:
+            value = d.get(name) if name is not None else None
+            if value is None:
+                entries.append(None)
+                continue
+            if isinstance(value, str):
+                if value in used:
+                    entries.append(None)
+                else:
+                    used.add(value)
+                    entries.append(value)
+                continue
+            kept = tuple(a for a in value if a not in used)
+            used.update(kept)
+            entries.append(kept if kept else None)
+        return P(*entries)
+
+    def __repr__(self) -> str:  # compact, stable for logging
+        body = ", ".join(f"{k}={v!r}" for k, v in self.table)
+        return f"ShardingRules({body})"
+
+
+# ---------------------------------------------------------------------------
+# Presets
+# ---------------------------------------------------------------------------
+
+
+def dp_rules(data_axes: tuple[str, ...] = MESH_AXES) -> ShardingRules:
+    """Paper-faithful Lightning distribution: batch superblocks over every
+    mesh axis, all weights and optimizer state replicated."""
+    return ShardingRules.of(batch=tuple(data_axes))
+
+
+def tp_rules(
+    data: tuple[str, ...] = ("pod", "data"),
+    model: str = "model",
+    shard_seq: bool = False,
+) -> ShardingRules:
+    """Megatron-style tensor-parallel placement over ``(data…, model)``.
+
+    ``shard_seq`` additionally sequence-shards the decode KV cache over the
+    model axis (flash-decode distribution for long contexts).
+    """
+    data = tuple(data)
+    return ShardingRules.of(
+        batch=data,
+        seq=None,
+        d_model=None,
+        heads=model,
+        kv_heads=model,
+        kv_seq=model if shard_seq else None,
+        d_ff=model,
+        vocab=model,
+        experts=model,
+        experts_buf=model,
+        expert_cap=None,
+        frames=None,
+        head_dim=None,
+        layers=None,
+        zero1=data,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Pytree + in-graph helpers
+# ---------------------------------------------------------------------------
+
+
+def tree_specs(rules: ShardingRules, logical_axes_tree: Any) -> Any:
+    """Map a pytree of logical-axis tuples to a pytree of PartitionSpecs.
+
+    Leaves are tuples of logical axis names (possibly containing ``None``
+    for unnamed dims; the empty tuple means a scalar → ``P()``).  ``None``
+    leaves pass through unchanged (no constraint)."""
+    return jax.tree.map(
+        lambda axes: rules.spec(axes),
+        logical_axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+
+def constrain(
+    x: jax.Array,
+    rules: ShardingRules | None,
+    logical_axes: Sequence[str | None],
+) -> jax.Array:
+    """Sharding-constraint helper used throughout the model code.
+
+    No-op when ``rules`` is None (single-device smoke paths) or when the
+    rules carry no mesh (pure rule tables); otherwise emits
+    ``with_sharding_constraint`` with the derived NamedSharding."""
+    if rules is None or rules.mesh is None:
+        return x
+    spec = rules.spec(logical_axes)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Planner bridge
+# ---------------------------------------------------------------------------
+
+
+def derive_rules_from_plan(
+    annotation: str | Annotation,
+    *,
+    grid_axis_names: tuple[str, ...],
+    grid_axis_mesh: Mapping[str, str | None],
+    array_ranks: Mapping[str, int],
+) -> dict[str, P]:
+    """Derive per-array PartitionSpecs from a Lightning annotation.
+
+    ``grid_axis_names`` names the launch-grid axes positionally (grid axis
+    0, 1, …) and ``grid_axis_mesh`` maps each name to a mesh axis (or None
+    to keep that grid axis unsharded).  The placement rule mirrors the
+    planner's chunk analysis:
+
+    * a dimension indexed by a *point* expression that is exactly one grid
+      variable (coefficient 1, no offset) is owner-computes shardable →
+      it gets that grid axis' mesh axis;
+    * any slice, halo (``i-1:i+1``), scaled, or offset access would require
+      neighbour data → the dimension is replicated (the runtime serves it
+      with gather/halo transfers instead);
+    * a mesh axis is used at most once per array (GSPMD's rule), deduped
+      left-to-right.
+
+    E.g. the paper's matmul ``global [i, j] => read A[i,:], read B[:,j],
+    write C[i,j]`` over ``{i: data, j: model}`` yields the Megatron specs
+    ``A=P('data', None)``, ``B=P(None, 'model')``, ``C=P('data', 'model')``.
+    """
+    ann = parse(annotation) if isinstance(annotation, str) else annotation
+    var_axes = ann.var_axes()
+
+    def mesh_axis_for(expr) -> str | None:
+        # Shardable iff the index is exactly `v` for a global grid var v.
+        if expr is None or expr.const != 0 or len(expr.coeffs) != 1:
+            return None
+        var, coeff = expr.coeffs[0]
+        if coeff != 1:
+            return None
+        space, axis = var_axes[var]
+        if space != "global" or axis >= len(grid_axis_names):
+            return None
+        return grid_axis_mesh.get(grid_axis_names[axis])
+
+    specs: dict[str, P] = {}
+    for stmt in ann.stmts:
+        rank = int(array_ranks.get(stmt.array, len(stmt.indices)))
+        used: set[str] = set()
+        entries: list[str | None] = []
+        for ix in stmt.indices[:rank]:
+            axis = mesh_axis_for(ix.lower) if ix.is_point else None
+            if axis is not None and axis not in used:
+                used.add(axis)
+                entries.append(axis)
+            else:
+                entries.append(None)
+        entries.extend([None] * (rank - len(entries)))
+        specs[stmt.array] = P(*entries)
+    return specs

@@ -1,0 +1,69 @@
+"""Version compatibility backfills for older jax releases.
+
+The test suite and launch drivers target the modern mesh API
+(``jax.make_mesh(..., axis_types=(jax.sharding.AxisType.Auto, ...))``).
+On jax releases that predate ``AxisType`` (< 0.5) this module backfills:
+
+* ``jax.sharding.AxisType`` — an enum with ``Auto``/``Explicit``/``Manual``
+  members.  Only ``Auto`` semantics exist pre-0.5, and an old-style
+  ``Mesh`` *is* an all-Auto mesh, so the members are accepted and only
+  validated, never acted on.
+* ``jax.make_mesh(..., axis_types=...)`` — the kwarg is accepted and
+  ignored (all-Auto behaviour).
+* ``Compiled.cost_analysis()`` — pre-0.5 returns a one-element list of
+  per-program dicts; the backfill unwraps it to the single dict newer jax
+  returns (what the dry-run drivers and tests consume).
+
+Applied once, idempotently, from ``repro/__init__.py`` so every process
+that imports anything under ``repro`` — including the subprocess snippets
+of the multi-device test harness — sees a uniform API.  On jax ≥ 0.5 this
+is a no-op.
+"""
+
+from __future__ import annotations
+
+import enum
+import functools
+
+
+def apply() -> None:
+    import jax
+
+    if hasattr(jax.sharding, "AxisType"):
+        return
+
+    class AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = AxisType
+
+    orig_make_mesh = jax.make_mesh
+
+    @functools.wraps(orig_make_mesh)
+    def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+        if axis_types is not None:
+            for t in axis_types:
+                if t is not AxisType.Auto:
+                    raise NotImplementedError(
+                        f"axis_types={axis_types!r}: only AxisType.Auto is "
+                        f"supported on jax {jax.__version__} (< 0.5); "
+                        "Explicit/Manual meshes need a newer jax"
+                    )
+        return orig_make_mesh(axis_shapes, axis_names, devices=devices)
+
+    jax.make_mesh = make_mesh
+
+    from jax._src import stages
+
+    orig_cost_analysis = stages.Compiled.cost_analysis
+
+    @functools.wraps(orig_cost_analysis)
+    def cost_analysis(self):
+        out = orig_cost_analysis(self)
+        if isinstance(out, list):
+            return out[0] if out else {}
+        return out
+
+    stages.Compiled.cost_analysis = cost_analysis

@@ -66,6 +66,7 @@ def rules_for(
     sizes = _axis_sizes(mesh)
     data_axes = tuple(a for a in axes if a != "model")
     m = sizes.get("model", 1)
+    concrete = mesh if isinstance(mesh, Mesh) else None
 
     if flavor == "dp":
         # Paper-faithful Lightning: batch superblocks over as many devices
@@ -75,9 +76,14 @@ def rules_for(
             if global_batch is not None
             else axes
         )
-        return dp_rules(data_axes=axes).updated(batch=batch_axes)
+        return (
+            dp_rules(data_axes=axes)
+            .updated(batch=batch_axes)
+            .with_mesh(concrete)
+        )
 
     r = tp_rules(data=data_axes, model="model", shard_seq=shard_seq)
+    r = r.with_mesh(concrete)
 
     if global_batch is not None:
         r = r.updated(batch=fit_batch_axes(mesh, global_batch, data_axes))

@@ -1,0 +1,127 @@
+"""repro.dist.fault: deterministic straggler detection, supervisor
+checkpoint-resume, backoff, and backup shard assignment."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import CheckpointManager
+from repro.dist.fault import (
+    FaultEvent,
+    HeartbeatMonitor,
+    StragglerMonitor,
+    TrainSupervisor,
+)
+
+
+class TestStraggler:
+    def test_flags_10x_step_time_outlier(self):
+        """An injected 10× step-time outlier is quarantined after exactly
+        `patience` consecutive evaluations — no sooner, no later."""
+        mon = HeartbeatMonitor(num_hosts=4)
+        strag = StragglerMonitor(mon, threshold=3.0, patience=2)
+
+        for host in range(4):
+            mon.beat(host, 1.0 if host != 2 else 10.0)
+        assert strag.evaluate() == []  # one flag, patience not reached
+        assert not mon.hosts[2].quarantined
+
+        for host in range(4):
+            mon.beat(host, 1.0 if host != 2 else 10.0)
+        assert strag.evaluate() == [2]
+        assert mon.hosts[2].quarantined
+        # Quarantined hosts drop out of later rounds.
+        assert strag.evaluate() == []
+
+    def test_transient_spike_resets_flags(self):
+        mon = HeartbeatMonitor(num_hosts=3)
+        strag = StragglerMonitor(mon, threshold=3.0, patience=2, window=1)
+        for host in range(3):
+            mon.beat(host, 1.0 if host != 1 else 10.0)
+        strag.evaluate()
+        assert mon.hosts[1].straggler_flags == 1
+        for host in range(3):
+            mon.beat(host, 1.0)  # spike gone
+        assert strag.evaluate() == []
+        assert mon.hosts[1].straggler_flags == 0
+        assert not mon.hosts[1].quarantined
+
+    def test_single_host_never_flagged(self):
+        mon = HeartbeatMonitor(num_hosts=1)
+        strag = StragglerMonitor(mon, threshold=1.1, patience=1)
+        mon.beat(0, 42.0)
+        assert strag.evaluate() == []
+
+    def test_backup_assignment_covers_all_shards_once(self):
+        t = [0.0]
+        mon = HeartbeatMonitor(num_hosts=4, timeout=5.0, clock=lambda: t[0])
+        strag = StragglerMonitor(mon)
+        for host in range(4):
+            mon.beat(host, 1.0)
+        mon.hosts[1].quarantined = True
+        t[0] = 10.0  # everyone silent past timeout...
+        for host in (0, 3):  # ...except hosts 0 and 3
+            mon.beat(host, 1.0)
+        backup = strag.backup_assignment(data_shards=8)
+        assert sorted(backup) == [0, 3]  # 1 quarantined, 2 dead
+        assigned = sorted(s for shards in backup.values() for s in shards)
+        assert assigned == list(range(8))
+
+
+class TestSupervisorResume:
+    def test_resumes_from_last_checkpoint_step(self, tmp_path):
+        """After a simulated worker loss the supervisor re-enters the loop
+        at the latest checkpointed step, and the restored state round-trips
+        bit-exactly."""
+        mgr = CheckpointManager(str(tmp_path))
+        state = {"w": jnp.arange(6, dtype=jnp.float32)}
+        starts = []
+
+        def step_fn(start):
+            starts.append(start)
+            if len(starts) == 1:
+                mgr.save(5, state, blocking=True)
+                raise RuntimeError("simulated worker loss")
+            restored, meta = mgr.restore(state)
+            np.testing.assert_array_equal(
+                np.asarray(restored["w"]), np.asarray(state["w"])
+            )
+            assert meta["step"] == 5
+            return 12
+
+        sup = TrainSupervisor(mgr, max_restarts=2)
+        assert sup.run(step_fn, total_steps=12) == 12
+        assert starts == [0, 5]
+        assert [e.kind for e in sup.events] == [
+            "failure", "resume", "complete"
+        ]
+        resume = sup.events[1]
+        assert isinstance(resume, FaultEvent) and resume.step == 5
+
+    def test_exponential_backoff_uses_injected_sleep(self, tmp_path):
+        slept = []
+        sup = TrainSupervisor(
+            CheckpointManager(str(tmp_path)),
+            max_restarts=3, backoff=0.5, sleep=slept.append,
+        )
+
+        def always_fail(start):
+            raise RuntimeError("boom")
+
+        with pytest.raises(RuntimeError):
+            sup.run(always_fail, total_steps=1)
+        assert slept == [0.5, 1.0, 2.0]
+
+    def test_no_checkpoint_resumes_from_zero(self, tmp_path):
+        sup = TrainSupervisor(CheckpointManager(str(tmp_path)),
+                              max_restarts=1)
+        starts = []
+
+        def step_fn(start):
+            starts.append(start)
+            if len(starts) == 1:
+                raise RuntimeError("early loss, nothing saved yet")
+            return 3
+
+        assert sup.run(step_fn, total_steps=3) == 3
+        assert starts == [0, 0]
