@@ -2,8 +2,13 @@
 
 Design points for 1000+-node runs:
 
-* **Atomic**: write to ``step_N.tmp/`` then ``os.rename`` — a crash mid-save
-  never corrupts the latest checkpoint (restore scans for complete dirs).
+* **Atomic**: write to ``tmp-step_N/`` then ``os.replace`` — a crash mid-save
+  never corrupts the latest checkpoint (restore scans for complete dirs and
+  stale tmp dirs are garbage-collected).
+* **Corruption-tolerant**: ``latest_step``/``restore`` skip checkpoints whose
+  manifest or arrays fail to deserialize and fall back to the previous step
+  instead of crashing — a torn write (or a bad disk) costs one checkpoint
+  interval, not the run.
 * **Async**: ``save()`` snapshots device arrays to host (cheap) and hands
   serialization to a background thread so the train loop isn't blocked by
   disk bandwidth (the Lightning overlap principle applied to state I/O).
@@ -67,9 +72,13 @@ class CheckpointManager:
 
         def work():
             try:
-                tmp = os.path.join(self.directory, f"step_{step:08d}.tmp")
+                # tmp- prefix keeps in-flight writes invisible to the
+                # step_* scans; os.replace makes publication atomic.
+                tmp = os.path.join(self.directory, f"tmp-step_{step:08d}")
                 final = os.path.join(self.directory, f"step_{step:08d}")
-                os.makedirs(tmp, exist_ok=True)
+                if os.path.exists(tmp):
+                    shutil.rmtree(tmp)
+                os.makedirs(tmp)
                 for key, arr in host_leaves:
                     fname = key.replace("/", "__") + ".npy"
                     np.save(os.path.join(tmp, fname), arr)
@@ -80,7 +89,7 @@ class CheckpointManager:
                     )
                 if os.path.exists(final):
                     shutil.rmtree(final)
-                os.rename(tmp, final)
+                os.replace(tmp, final)
                 self._gc()
             except Exception as e:  # pragma: no cover - surfaced via wait()
                 self._error = e
@@ -105,10 +114,29 @@ class CheckpointManager:
                 os.path.join(self.directory, f"step_{s:08d}"),
                 ignore_errors=True,
             )
+        for name in os.listdir(self.directory):  # stale in-flight writes
+            if name.startswith("tmp-step_"):
+                shutil.rmtree(os.path.join(self.directory, name),
+                              ignore_errors=True)
 
     # -- restore -----------------------------------------------------------------
 
-    def available_steps(self) -> list[int]:
+    def _manifest_ok(self, step: int) -> bool:
+        """A checkpoint is loadable only if its manifest parses and every
+        leaf file it lists exists (a torn write fails both ways)."""
+        path = os.path.join(self.directory, f"step_{step:08d}")
+        try:
+            with open(os.path.join(path, "manifest.json")) as f:
+                manifest = json.load(f)
+            for key in manifest["keys"]:
+                fname = key.replace("/", "__") + ".npy"
+                if not os.path.exists(os.path.join(path, fname)):
+                    return False
+            return True
+        except (OSError, ValueError, KeyError, TypeError):
+            return False
+
+    def available_steps(self, verify: bool = False) -> list[int]:
         out = []
         for name in os.listdir(self.directory):
             if name.startswith("step_") and not name.endswith(".tmp"):
@@ -116,10 +144,16 @@ class CheckpointManager:
                     os.path.join(self.directory, name, "manifest.json")
                 ):
                     out.append(int(name.split("_")[1]))
-        return sorted(out)
+        out = sorted(out)
+        if verify:
+            out = [s for s in out if self._manifest_ok(s)]
+        return out
 
     def latest_step(self) -> int | None:
-        steps = self.available_steps()
+        """Latest *loadable* step: corrupted checkpoints (unparseable
+        manifest, missing leaves) are skipped, falling back to the previous
+        step instead of handing the supervisor a restore that will crash."""
+        steps = self.available_steps(verify=True)
         return steps[-1] if steps else None
 
     def restore(
@@ -130,10 +164,35 @@ class CheckpointManager:
     ) -> tuple[Any, dict]:
         """Restore into the structure of ``template``.  ``put`` maps
         (tree-path key, host array) → device array; default is plain
-        jnp.asarray (single device)."""
-        step = step if step is not None else self.latest_step()
-        if step is None:
+        jnp.asarray (single device).
+
+        With ``step=None`` the newest loadable checkpoint is used; ones
+        that fail to deserialize (torn manifest, truncated ``.npy``) are
+        skipped newest-to-oldest and recorded in ``self.skipped``.  An
+        explicit ``step`` that fails still raises — the caller asked for
+        exactly that one."""
+        self.skipped: list[tuple[int, str]] = []
+        if step is not None:
+            return self._restore_step(template, step, put)
+        candidates = self.available_steps(verify=True)
+        if not candidates:
             raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        for s in reversed(candidates):
+            try:
+                return self._restore_step(template, s, put)
+            except Exception as exc:  # noqa: BLE001 — fall back one step
+                self.skipped.append((s, repr(exc)))
+        raise FileNotFoundError(
+            f"no loadable checkpoint in {self.directory}; "
+            f"skipped: {self.skipped}"
+        )
+
+    def _restore_step(
+        self,
+        template: Any,
+        step: int,
+        put: Callable[[str, np.ndarray], Any] | None,
+    ) -> tuple[Any, dict]:
         path = os.path.join(self.directory, f"step_{step:08d}")
         with open(os.path.join(path, "manifest.json")) as f:
             manifest = json.load(f)

@@ -13,6 +13,21 @@ Public API (mirrors the paper's host-code surface, Fig. 9):
 
 from .annotations import Annotation, AnnotationError, parse
 from .dist_array import DistributedArray, make_array
+from .faults import (
+    FaultInjector,
+    FaultSpec,
+    InjectedFault,
+    RecoveryPolicy,
+    corrupt_transfer,
+    decorrelated_jitter,
+    fail_launch,
+    fail_request,
+    fail_step,
+    fail_task,
+    kill_worker,
+    spurious_oom,
+    timeout_transfer,
+)
 from .distributions import (
     BlockDist,
     Chunk,
@@ -36,9 +51,12 @@ __all__ = [
     "Affine", "Annotation", "AnnotationError", "ArgPlan", "ArrayMeta",
     "BlockDist", "BlockWork", "Chunk", "ColDist", "CommPattern", "Context",
     "CustomDist", "DistributedArray", "Distribution", "EvenWork",
-    "ExecutionPlan", "HardwareModel", "KernelDef", "LaunchPlan", "make_array",
-    "MemoryManager", "MeshWork", "OutOfMemory", "parse", "Planner", "Region",
-    "ReplicatedDist", "RowDist", "SimResult", "Simulator", "StencilDist",
-    "Superblock", "SuperblockInfo", "TaskKind", "Tier", "TileDist",
-    "TileWork", "Topology",
+    "ExecutionPlan", "FaultInjector", "FaultSpec", "HardwareModel",
+    "InjectedFault", "KernelDef", "LaunchPlan", "make_array",
+    "MemoryManager", "MeshWork", "OutOfMemory", "parse", "Planner",
+    "RecoveryPolicy", "Region", "ReplicatedDist", "RowDist", "SimResult",
+    "Simulator", "StencilDist", "Superblock", "SuperblockInfo", "TaskKind",
+    "Tier", "TileDist", "TileWork", "Topology", "corrupt_transfer",
+    "decorrelated_jitter", "fail_launch", "fail_request", "fail_step",
+    "fail_task", "kill_worker", "spurious_oom", "timeout_transfer",
 ]

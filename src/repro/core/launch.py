@@ -55,6 +55,7 @@ from . import annotations as ann_mod
 from .annotations import Annotation, REDUCE as MODE_REDUCE
 from .dist_array import DistributedArray, make_array
 from .distributions import Distribution, ReplicatedDist
+from .faults import FaultInjector, RecoveryPolicy
 from .ndrange import Region
 from .plan_ir import CommPattern, ExecutionPlan, LaunchPlan
 from .planner import ArrayMeta, Planner, Topology
@@ -121,8 +122,16 @@ class Context:
         mesh: Mesh | None = None,
         mesh_axes: Sequence[str] | None = None,
         devices_per_node: int = 4,
+        fault_injector: FaultInjector | None = None,
+        recovery: RecoveryPolicy | None = None,
     ):
         self.mesh = mesh
+        # Fault tolerance: with an injector threaded in, failed kernel
+        # launches retry under `recovery` instead of propagating; every
+        # failure/recovery is recorded in `fault_events`.
+        self.fault_injector = fault_injector
+        self.recovery = recovery or RecoveryPolicy()
+        self.fault_events: list[dict] = []
         if mesh is not None:
             self.mesh_axes = tuple(mesh_axes or mesh.axis_names)
             num_devices = mesh.size
@@ -198,12 +207,16 @@ class Context:
         comm = {a.array: a.pattern for a in plan.args}
 
         if self.mesh is None or self.mesh.size == 1:
-            outputs = self._execute_single(kernel, grid, args, scalars)
+            outputs = self._with_recovery(
+                kernel, lambda: self._execute_single(kernel, grid, args,
+                                                     scalars)
+            )
             in_specs = {n: P() for n in args}
             out_specs = {n: P() for n in outputs}
         else:
-            outputs, in_specs, out_specs = self._execute_mesh(
-                kernel, grid, args, scalars, plan, work_dist
+            outputs, in_specs, out_specs = self._with_recovery(
+                kernel, lambda: self._execute_mesh(kernel, grid, args,
+                                                   scalars, plan, work_dist)
             )
 
         self.records.append(
@@ -214,6 +227,43 @@ class Context:
         for name, val in outputs.items():
             result[name] = args[name].replace_value(val)
         return result
+
+    def _with_recovery(self, kernel: KernelDef, attempt_fn: Callable[[], Any]):
+        """Run one launch attempt, retrying failed launches.
+
+        With no injector this is a plain call (zero behavioral change).
+        With one, injected ``launch`` probes — and any real exception the
+        attempt raises — retry up to ``recovery.max_attempts`` times before
+        propagating, mirroring the runtime-level retry the simulator's
+        recovery engine models.  Launches are functional (inputs are
+        immutable JAX arrays), so re-execution is always safe."""
+        if self.fault_injector is None:
+            return attempt_fn()
+        attempt = 0
+        while True:
+            try:
+                if self.fault_injector.probe(
+                    "launch", task=len(self.records), site=kernel.name
+                ):
+                    raise RuntimeError(
+                        f"injected launch failure: {kernel.name}"
+                    )
+                result = attempt_fn()
+            except Exception as exc:  # noqa: BLE001 — retried, then re-raised
+                attempt += 1
+                self.fault_events.append({
+                    "kind": "launch_failure", "launch": kernel.name,
+                    "attempt": attempt, "error": repr(exc),
+                })
+                if attempt > self.recovery.max_attempts:
+                    raise
+                continue
+            if attempt:
+                self.fault_events.append({
+                    "kind": "launch_recovered", "launch": kernel.name,
+                    "attempt": attempt,
+                })
+            return result
 
     @staticmethod
     def synchronize(*arrays: DistributedArray) -> None:

@@ -8,7 +8,12 @@ device memory (HBM), host memory, or disk — and migrates chunks on demand:
 * when a tier is full, **least-recently-used unpinned chunks are evicted** to
   the next tier (HBM → host → disk);
 * allocation uses pre-sized pools (the paper found cudaMalloc/pinned-alloc
-  expensive; we model pool hits as free and pool misses with a fixed cost).
+  expensive; we model pool hits as free and pool misses with a fixed cost);
+* repeated :class:`OutOfMemory` pressure triggers **graceful degradation**
+  (:meth:`MemoryManager.degrade`): the effective device capacity shrinks and
+  unpinned chunks spill harder, instead of the whole plan aborting.  A
+  :class:`~repro.core.faults.FaultInjector` can be threaded in to raise
+  spurious OOMs deterministically so the degradation path is testable.
 
 On real TPU hardware the HBM↔host tier maps to host offloading and the
 chunk-streaming path in :mod:`repro.core.launch`; this module is the
@@ -77,8 +82,14 @@ class OutOfMemory(RuntimeError):
 class MemoryManager:
     """LRU spilling across DEVICE → HOST → DISK for one worker."""
 
-    def __init__(self, hw: HardwareModel):
+    def __init__(self, hw: HardwareModel, injector=None, worker: int | None = None,
+                 degrade_factor: float = 0.75,
+                 min_device_fraction: float = 0.25):
         self.hw = hw
+        self.injector = injector  # FaultInjector | None (spurious OOMs)
+        self.worker = worker
+        self.degrade_factor = float(degrade_factor)
+        self.min_device_fraction = float(min_device_fraction)
         self.capacity = {
             Tier.DEVICE: hw.device_capacity,
             Tier.HOST: hw.host_capacity,
@@ -91,7 +102,7 @@ class MemoryManager:
         self.stats = {
             "h2d_bytes": 0.0, "d2h_bytes": 0.0,
             "host2disk_bytes": 0.0, "disk2host_bytes": 0.0,
-            "evictions": 0, "pool_misses": 0,
+            "evictions": 0, "pool_misses": 0, "oom_demotions": 0,
         }
 
     # -- bookkeeping ---------------------------------------------------------
@@ -128,6 +139,10 @@ class MemoryManager:
         """Materialize all chunks in DEVICE memory (all-or-nothing) and pin
         them.  Returns the modeled transfer time (seconds) this staging
         costs; concurrent stagings overlap in the scheduler."""
+        if self.injector is not None and self.injector.probe(
+            "oom", worker=self.worker, site="stage"
+        ):
+            raise OutOfMemory("injected: spurious allocation failure")
         total_new = sum(
             self.chunks[k].size for k in keys
             if self.chunks[k].tier != Tier.DEVICE
@@ -202,6 +217,38 @@ class MemoryManager:
             self.stats["host2disk_bytes"] += info.size
         self._account_remove(info)
         self._account_add(info, nxt)
+        return cost
+
+    # -- graceful degradation -----------------------------------------------------
+
+    def degrade(self) -> float | None:
+        """Shrink the effective DEVICE capacity by ``degrade_factor`` and
+        spill unpinned device chunks until usage fits again.
+
+        Models a device losing usable HBM under pressure (fragmentation,
+        another tenant, a flaky allocator): subsequent stagings spill
+        harder instead of the run aborting.  Returns the modeled spill
+        seconds, or ``None`` when already at the degradation floor
+        (``min_device_fraction`` × the hardware capacity) — the caller
+        should then give up and surface the OOM."""
+        floor = self.hw.device_capacity * self.min_device_fraction
+        cur = self.capacity[Tier.DEVICE]
+        new_cap = max(floor, cur * self.degrade_factor)
+        if new_cap >= cur:
+            return None
+        self.capacity[Tier.DEVICE] = new_cap
+        self.stats["oom_demotions"] += 1
+        cost = 0.0
+        while self.used[Tier.DEVICE] > new_cap:
+            victim_key = next(
+                (k for k in self.lru[Tier.DEVICE]
+                 if self.chunks[k].pinned == 0),
+                None,
+            )
+            if victim_key is None:
+                break  # everything pinned; pressure persists but we tried
+            cost += self._demote(self.chunks[victim_key])
+            self.stats["evictions"] += 1
         return cost
 
     # -- introspection --------------------------------------------------------------

@@ -147,6 +147,20 @@ class ExecutionPlan:
             depth[t.tid] = 1 + max((depth[d] for d in t.deps), default=0)
         return max(depth.values(), default=0)
 
+    # -- lineage (fault recovery) ---------------------------------------------
+
+    def producers_of(self, key: tuple[str, int]) -> list[int]:
+        """Task ids that write chunk ``key``, in plan order.  The recovery
+        engine replays the latest *finished* producer to recompute a chunk
+        lost with a dead worker (lineage replay)."""
+        return [t.tid for t in self.tasks
+                if any(ref.key() == key for ref in t.writes)]
+
+    def readers_of(self, key: tuple[str, int]) -> list[int]:
+        """Task ids that read chunk ``key``, in plan order."""
+        return [t.tid for t in self.tasks
+                if any(ref.key() == key for ref in t.reads)]
+
 
 # ---------------------------------------------------------------------------
 # Communication patterns recognized by the JAX lowering

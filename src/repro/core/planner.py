@@ -92,6 +92,17 @@ class ChunkStateTable:
         st.readers_since_write = []
         st.version += 1
 
+    # -- lineage lookups (fault recovery) -----------------------------------
+
+    def keys(self) -> list[tuple[str, int]]:
+        return list(self._state)
+
+    def last_writer_of(self, key: tuple[str, int]) -> int | None:
+        """The task id that produced the current version of ``key``, if any
+        — the recovery engine's first stop when a chunk is lost."""
+        st = self._state.get(key)
+        return st.last_writer if st is not None else None
+
 
 @dataclasses.dataclass(frozen=True)
 class Topology:

@@ -17,16 +17,43 @@ Executors per worker (all overlap, like CUDA streams / ICI DMA):
   * ``h2d``      — staging transfers          (duration from MemoryManager)
   * ``copy``     — intra-node chunk copies    (bytes / ici_bw)
   * ``net``      — inter-node send/recv       (bytes / net_bw)
+
+Fault tolerance: with a :class:`~repro.core.faults.FaultInjector` threaded
+in, the simulator exercises a full **recovery engine** instead of treating
+any failure as fatal:
+
+* failed tasks / timed-out / corrupted transfers retry with capped
+  exponential backoff (:class:`~repro.core.faults.RecoveryPolicy`);
+* :class:`~repro.core.memory.OutOfMemory` during staging retries and, when
+  repeated, triggers graceful tier demotion (``MemoryManager.degrade``);
+* a dead worker's pending tasks re-plan onto the survivors via the
+  ``StragglerMonitor.backup_assignment`` path from :mod:`repro.dist.fault`,
+  and chunks lost with it are recovered from surviving replicas or
+  recomputed from their lineage (the plan's producer tasks — paper §3.2's
+  dependency edges put to work).
+
+Every recovery action is surfaced in ``SimResult.stats`` so benchmarks can
+report makespan-under-faults next to the fault-free figures.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import heapq
+import random
 from typing import Callable
 
-from .memory import HardwareModel, MemoryManager, Tier
+from .faults import FaultInjector, RecoveryPolicy
+from .memory import HardwareModel, MemoryManager, OutOfMemory, Tier
 from .plan_ir import ExecutionPlan, Task, TaskKind
+
+#: SimResult.stats keys the recovery engine maintains (always present, zero
+#: when nothing fired — benchmarks can report them unconditionally).
+RECOVERY_STAT_KEYS = (
+    "faults_injected", "task_retries", "transfer_retries", "oom_events",
+    "oom_degradations", "worker_deaths", "tasks_rescheduled",
+    "replica_recoveries", "lineage_replays", "recovered_tasks",
+)
 
 
 @dataclasses.dataclass
@@ -38,6 +65,9 @@ class SimResult:
 
     def utilization(self, resource: str = "compute") -> float:
         return self.busy.get(resource, 0.0) / self.makespan if self.makespan else 0.0
+
+    def recovery_stats(self) -> dict[str, float]:
+        return {k: self.stats.get(k, 0.0) for k in RECOVERY_STAT_KEYS}
 
 
 _EXECUTOR_FOR = {
@@ -51,6 +81,9 @@ _EXECUTOR_FOR = {
     TaskKind.SYNC_REPLICAS: "copy",
 }
 
+_TRANSFER_KINDS = (TaskKind.COPY, TaskKind.SEND, TaskKind.RECV,
+                   TaskKind.SYNC_REPLICAS)
+
 
 class Simulator:
     """Event-driven execution of a task DAG against the hardware model."""
@@ -63,6 +96,10 @@ class Simulator:
         bytes_per_thread: float = 0.0,
         duration_fn: Callable[[Task], float] | None = None,
         initial_tier: Tier = Tier.HOST,
+        fault_injector: FaultInjector | None = None,
+        recovery: RecoveryPolicy | None = None,
+        chunk_state=None,  # planner ChunkStateTable, for lineage lookups
+        seed: int = 0,
     ):
         self.hw = hw
         self.num_workers = num_workers
@@ -70,7 +107,14 @@ class Simulator:
         self.bytes_per_thread = bytes_per_thread
         self.duration_fn = duration_fn
         self.initial_tier = initial_tier
-        self.memory = [MemoryManager(hw) for _ in range(num_workers)]
+        self.fault_injector = fault_injector
+        self.recovery = recovery or RecoveryPolicy()
+        self.chunk_state = chunk_state
+        self.seed = seed
+        self.memory = [
+            MemoryManager(hw, injector=fault_injector, worker=i)
+            for i in range(num_workers)
+        ]
 
     # -- cost model ---------------------------------------------------------------
 
@@ -97,11 +141,18 @@ class Simulator:
             return t.bytes / hw.ici_bw + hw.task_overhead
         return hw.task_overhead
 
+    @staticmethod
+    def _task_size(t: Task) -> int:
+        return max(1, t.bytes or (t.region.volume * 4 if t.region else 0))
+
     # -- simulation -----------------------------------------------------------------
 
     def run(self, plan: ExecutionPlan, register_chunks: bool = True) -> SimResult:
         plan.validate()
         tasks = plan.tasks
+        injector = self.fault_injector
+        policy = self.recovery
+        rng = random.Random(self.seed)
         indeg = {t.tid: len(t.deps) for t in tasks}
         succ: dict[int, list[int]] = {t.tid: [] for t in tasks}
         for t in tasks:
@@ -112,30 +163,144 @@ class Simulator:
             for t in tasks:
                 w = t.worker % self.num_workers
                 for ref in list(t.reads) + list(t.writes):
-                    size = t.bytes or (t.region.volume * 4 if t.region else 0)
+                    size = self._task_size(t)
                     tier = self.initial_tier
                     if (tier is Tier.DEVICE
                             and self.memory[w].used[Tier.DEVICE] + size
                             > self.memory[w].capacity[Tier.DEVICE]):
                         tier = Tier.HOST  # warm start only while it fits
-                    self.memory[w].register(ref.key(), max(1, size),
-                                            tier=tier)
+                    self.memory[w].register(ref.key(), size, tier=tier)
 
         # Per-worker resource availability times; staging throttle state.
         res_free: dict[tuple[int, str], float] = {}
         staged_bytes = [0.0] * self.num_workers
         busy: dict[str, float] = {}
         stats: dict[str, float] = {"stage_wait": 0.0}
+        for k in RECOVERY_STAT_KEYS:
+            stats[k] = 0.0
 
-        # Event queue: (time, seq, kind, payload)
-        events: list[tuple[float, int, str, int]] = []
+        # Recovery state.
+        attempts: dict[int, int] = {}  # tid -> failed attempts so far
+        finished: set[int] = set()
+        dead: set[int] = set()
+        worker_map = {w: w for w in range(self.num_workers)}
+        epoch: dict[int, int] = {t.tid: 0 for t in tasks}  # stale-event guard
+        inflight_on: dict[int, int] = {}  # staged/running tid -> worker
+
+        def eff(t: Task) -> int:
+            return worker_map[t.worker % self.num_workers]
+
+        # Event queue: (time, seq, kind, tid, epoch)
+        events: list[tuple[float, int, str, int, int]] = []
         seq = 0
-        ready_at: dict[int, float] = {}
 
         def push(time: float, kind: str, tid: int) -> None:
             nonlocal seq
-            heapq.heappush(events, (time, seq, kind, tid))
+            heapq.heappush(events, (time, seq, kind, tid, epoch[tid]))
             seq += 1
+
+        def fail(tid: int, stat_key: str, extra_delay: float = 0.0) -> None:
+            """Schedule a retry with capped-exponential backoff + jitter."""
+            attempts[tid] = attempts.get(tid, 0) + 1
+            stats["faults_injected"] += 1
+            stats[stat_key] += 1
+            if attempts[tid] > policy.max_attempts:
+                raise RuntimeError(
+                    f"task {tid} ({tasks[tid].kind.value}) failed "
+                    f"{attempts[tid]} times; recovery gave up"
+                )
+            push(now + extra_delay + policy.delay(attempts[tid], rng),
+                 "ready", tid)
+
+        def kill_worker(w: int) -> None:
+            """Worker death: re-plan its tasks onto the survivors (via
+            StragglerMonitor.backup_assignment) and recover its chunks from
+            replicas or lineage replay."""
+            # Lazy import: repro.dist imports repro.core at module load, so
+            # a top-level import here would be circular.
+            from repro.dist.fault import HeartbeatMonitor, StragglerMonitor
+
+            dead.add(w)
+            stats["worker_deaths"] += 1
+            mon = HeartbeatMonitor(num_hosts=self.num_workers)
+            for h in range(self.num_workers):
+                if h in dead:
+                    mon.hosts[h].quarantined = True
+                else:
+                    mon.beat(h, 1.0)
+            assignment = StragglerMonitor(mon).backup_assignment(
+                data_shards=self.num_workers
+            )
+            shard_to_host = {s: h for h, shards in assignment.items()
+                             for s in shards}
+            for orig in range(self.num_workers):
+                worker_map[orig] = (orig if orig not in dead
+                                    else shard_to_host[orig])
+
+            # Chunks lost with the worker: if a surviving worker holds a
+            # replica the migration below re-fetches it; otherwise replay
+            # the lineage (the latest finished producer recomputes the
+            # chunk on its new home).  This analysis must run BEFORE the
+            # migration re-registers anything, or a chunk that lived only
+            # on the dead worker would masquerade as a survivor replica.
+            pending_reads = {
+                ref.key() for t2 in tasks if t2.tid not in finished
+                for ref in t2.reads
+            }
+            lost = sorted(set(self.memory[w].chunks) & pending_reads)
+            replayed: set = set()
+            for key in lost:
+                if any(key in self.memory[sv].chunks
+                       for sv in range(self.num_workers) if sv not in dead):
+                    stats["replica_recoveries"] += 1
+                    continue
+                ptid = None
+                if self.chunk_state is not None:
+                    cand = self.chunk_state.last_writer_of(key)
+                    if cand is not None and cand in finished:
+                        ptid = cand
+                if ptid is None:
+                    done_producers = [p for p in plan.producers_of(key)
+                                      if p in finished]
+                    ptid = done_producers[-1] if done_producers else None
+                if ptid is None:
+                    continue  # never-written input: re-fetch is the register
+                replayed.add(key)
+                push(now, "replay", ptid)
+
+            # Migrate pending tasks' chunk registrations to their new homes
+            # (re-fetched into HOST tier; staging pays the promote cost).
+            # Keys awaiting lineage replay are skipped — replay_done
+            # registers them once the recompute lands.
+            if register_chunks:
+                for t2 in tasks:
+                    if t2.tid in finished:
+                        continue
+                    orig = t2.worker % self.num_workers
+                    if orig not in dead:
+                        continue
+                    nw = worker_map[orig]
+                    for ref in list(t2.reads) + list(t2.writes):
+                        if ref.key() in replayed:
+                            continue
+                        self.memory[nw].register(
+                            ref.key(), self._task_size(t2), tier=Tier.HOST
+                        )
+
+            # Tasks mid-flight on the dead worker: invalidate their queued
+            # events (epoch bump) and reschedule on the survivors.
+            for tid, home in sorted(inflight_on.items()):
+                if home != w:
+                    continue
+                del inflight_on[tid]
+                epoch[tid] += 1
+                stats["tasks_rescheduled"] += 1
+                push(now + policy.delay(1, rng), "ready", tid)
+            staged_bytes[w] = 0.0
+            if throttled[w]:
+                pending, throttled[w] = throttled[w], []
+                for p in pending:
+                    push(now, "ready", p)
 
         for t in tasks:
             if indeg[t.tid] == 0:
@@ -147,9 +312,11 @@ class Simulator:
         throttled: dict[int, list[int]] = {w: [] for w in range(self.num_workers)}
 
         while events:
-            now, _, kind, tid = heapq.heappop(events)
+            now, _, kind, tid, ep = heapq.heappop(events)
+            if ep != epoch[tid]:
+                continue  # event from before this task's worker died
             t = tasks[tid]
-            w = t.worker % self.num_workers
+            w = eff(t)
 
             if kind == "ready":
                 footprint = sum(
@@ -161,11 +328,27 @@ class Simulator:
                         and staged_bytes[w] > 0):
                     throttled[w].append(tid)
                     continue
-                staged_bytes[w] += footprint
                 # Stage chunks (h2d resource serializes transfers).
                 keys = [r.key() for r in list(t.reads) + list(t.writes)
                         if r.key() in self.memory[w].chunks]
-                stage_cost = self.memory[w].stage(keys)
+                try:
+                    stage_cost = self.memory[w].stage(keys)
+                except OutOfMemory:
+                    stats["oom_events"] += 1
+                    if attempts.get(tid, 0) >= policy.max_attempts:
+                        raise  # degradation exhausted: surface the real OOM
+                    delay = 0.0
+                    if attempts.get(tid, 0) >= policy.oom_degrade_after:
+                        # Repeated pressure: demote the tier instead of
+                        # hammering the same capacity again.
+                        spill = self.memory[w].degrade()
+                        if spill is not None:
+                            stats["oom_degradations"] += 1
+                            delay += spill
+                    fail(tid, "task_retries", extra_delay=delay)
+                    continue
+                staged_bytes[w] += footprint
+                inflight_on[tid] = w
                 h2d_key = (w, "h2d")
                 start = max(now, res_free.get(h2d_key, 0.0))
                 res_free[h2d_key] = start + stage_cost
@@ -182,21 +365,64 @@ class Simulator:
                 push(start + dur, "done", tid)
 
             elif kind == "done":
-                completed += 1
                 keys = [r.key() for r in list(t.reads) + list(t.writes)
                         if r.key() in self.memory[w].chunks]
                 self.memory[w].unstage(keys)
                 footprint = sum(self.memory[w].chunks[k].size for k in keys)
                 staged_bytes[w] = max(0.0, staged_bytes[w] - footprint)
+                inflight_on.pop(tid, None)
                 # Release throttled tasks.
                 if throttled[w]:
                     pending, throttled[w] = throttled[w], []
                     for p in pending:
                         push(now, "ready", p)
+
+                # Did this attempt fail?  (Injected task faults, transfer
+                # timeouts and corruptions are detected at completion.)
+                if injector is not None:
+                    if t.kind in _TRANSFER_KINDS:
+                        if injector.probe("transfer_timeout", worker=w,
+                                          task=tid, site=t.label):
+                            fail(tid, "transfer_retries",
+                                 extra_delay=policy.transfer_timeout)
+                            continue
+                        if injector.probe("transfer_corrupt", worker=w,
+                                          task=tid, site=t.label):
+                            fail(tid, "transfer_retries")
+                            continue
+                    if injector.probe("task", worker=w, task=tid,
+                                      site=t.label):
+                        fail(tid, "task_retries")
+                        continue
+
+                finished.add(tid)
+                completed += 1
+                if attempts.get(tid, 0) > 0:
+                    stats["recovered_tasks"] += 1
                 for s in succ[tid]:
                     indeg[s] -= 1
                     if indeg[s] == 0:
                         push(now, "ready", s)
+                if (injector is not None and w not in dead
+                        and injector.probe("worker_death", worker=w)):
+                    kill_worker(w)
+
+            elif kind == "replay":
+                # Lineage replay: recompute a lost chunk by re-running its
+                # finished producer on that producer's (remapped) worker.
+                resource = _EXECUTOR_FOR[t.kind]
+                rkey = (w, resource)
+                dur = self._duration(t)
+                start = max(now, res_free.get(rkey, 0.0))
+                res_free[rkey] = start + dur
+                busy[resource] = busy.get(resource, 0.0) + dur
+                push(start + dur, "replay_done", tid)
+
+            elif kind == "replay_done":
+                stats["lineage_replays"] += 1
+                for ref in t.writes:  # recomputed chunk lives here now
+                    self.memory[w].register(ref.key(), self._task_size(t),
+                                            tier=Tier.HOST)
 
         if completed != len(tasks):
             raise RuntimeError(

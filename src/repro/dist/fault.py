@@ -22,10 +22,13 @@ testable:
 from __future__ import annotations
 
 import dataclasses
+import random
 import statistics
 import time
 from collections import deque
 from typing import Callable
+
+from repro.core.faults import decorrelated_jitter
 
 
 @dataclasses.dataclass
@@ -144,6 +147,7 @@ class FaultEvent:
     kind: str  # "failure" | "resume" | "complete"
     step: int
     detail: str = ""
+    at: float = 0.0  # supervisor clock timestamp
 
 
 class TrainSupervisor:
@@ -151,9 +155,16 @@ class TrainSupervisor:
 
     ``run(step_fn, total_steps)`` calls ``step_fn(start_step)`` and expects
     it to return the final step reached.  On any exception it records a
-    ``failure`` event, sleeps an exponential backoff, re-reads the latest
-    checkpoint step from the manager, records ``resume``, and re-enters the
-    loop there — up to ``max_restarts`` times before re-raising."""
+    ``failure`` event, sleeps a backoff, re-reads the latest checkpoint
+    step from the manager, records ``resume``, and re-enters the loop there
+    — up to ``max_restarts`` times before re-raising.
+
+    Time is fully injected (``clock`` for event timestamps, ``sleep`` for
+    the backoff — no bare ``time.sleep`` anywhere), so every restart path
+    is deterministic under test.  Backoff is capped exponential by
+    default; pass ``jitter_seed`` to switch to seeded *decorrelated
+    jitter* so a fleet of hosts that failed together doesn't re-enter (and
+    re-fail) in lock-step."""
 
     def __init__(
         self,
@@ -162,13 +173,29 @@ class TrainSupervisor:
         backoff: float = 0.0,
         max_backoff: float = 30.0,
         sleep: Callable[[float], None] = time.sleep,
+        clock: Callable[[], float] = time.monotonic,
+        jitter_seed: int | None = None,
     ):
         self.ckpt = ckpt_manager
         self.max_restarts = int(max_restarts)
         self.backoff = float(backoff)
         self.max_backoff = float(max_backoff)
         self.sleep = sleep
+        self.clock = clock
+        self._rng = (random.Random(jitter_seed)
+                     if jitter_seed is not None else None)
+        self._prev_delay: float | None = None
         self.events: list[FaultEvent] = []
+
+    def _backoff_delay(self, restarts: int) -> float:
+        if self._rng is not None:
+            prev = self._prev_delay if self._prev_delay else self.backoff
+            delay = decorrelated_jitter(prev, self.backoff,
+                                        self.max_backoff, self._rng)
+        else:
+            delay = min(self.backoff * 2 ** (restarts - 1), self.max_backoff)
+        self._prev_delay = delay
+        return delay
 
     def _latest_step(self) -> int:
         if self.ckpt is None:
@@ -184,25 +211,25 @@ class TrainSupervisor:
                 last = int(step_fn(start))
             except Exception as exc:  # noqa: BLE001 — any worker loss
                 self.events.append(
-                    FaultEvent("failure", self._latest_step(), repr(exc))
+                    FaultEvent("failure", self._latest_step(), repr(exc),
+                               at=self.clock())
                 )
                 if restarts >= self.max_restarts:
                     raise
                 restarts += 1
                 if self.backoff:
-                    self.sleep(
-                        min(self.backoff * 2 ** (restarts - 1),
-                            self.max_backoff)
-                    )
+                    self.sleep(self._backoff_delay(restarts))
                 start = self._latest_step()
                 self.events.append(
                     FaultEvent(
                         "resume", start,
                         f"restart {restarts}/{self.max_restarts}",
+                        at=self.clock(),
                     )
                 )
                 continue
             self.events.append(
-                FaultEvent("complete", last, f"target {total_steps}")
+                FaultEvent("complete", last, f"target {total_steps}",
+                           at=self.clock())
             )
             return last

@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.ckpt import CheckpointManager
 from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.core.faults import FaultInjector
 from repro.data.pipeline import DataConfig, TokenStream
 from repro.dist.fault import HeartbeatMonitor, StragglerMonitor, TrainSupervisor
 from repro.train.train_loop import init_train_state, make_train_step
@@ -41,7 +42,12 @@ def run_training(
     ckpt_every: int = 20,
     seed: int = 0,
     log_every: int = 10,
-    fail_at_step: int | None = None,  # fault-injection for tests
+    fail_at_step: int | None = None,  # legacy one-shot fault injection
+    fault_injector: FaultInjector | None = None,  # general fault schedule
+    supervisor_backoff: float = 0.0,
+    jitter_seed: int | None = None,  # decorrelated restart jitter
+    clock=time.monotonic,
+    sleep=time.sleep,
 ) -> dict:
     cfg = get_smoke_config(arch) if smoke else get_config(arch)
     data = DataConfig(vocab=cfg.vocab, seq_len=seq, global_batch=batch,
@@ -83,28 +89,34 @@ def run_training(
             start = meta["step"]
         step = start
         while step < steps:
-            t0 = time.time()
+            t0 = clock()
             batch_data = make_batch(step)
             state, metrics = step_fn(state, batch_data)
             loss = float(metrics["loss"])
             losses.append(loss)
             step += 1
-            monitor.beat(0, time.time() - t0)
+            monitor.beat(0, clock() - t0)
             stragglers.evaluate()
             if armed["fail"] and step == fail_at_step:
                 armed["fail"] = False  # one-shot fault injection
                 raise RuntimeError(f"injected worker failure at {step}")
+            if fault_injector is not None and fault_injector.probe(
+                "step", task=step, site="train_step"
+            ):
+                raise RuntimeError(f"injected step failure at {step}")
             if ckpt is not None and step % ckpt_every == 0:
                 ckpt.save(step, state)
             if step % log_every == 0:
                 print(f"step {step:5d} loss {loss:.4f} "
-                      f"({time.time() - t0:.2f}s/step)")
+                      f"({clock() - t0:.2f}s/step)")
         if ckpt is not None:
             ckpt.save(steps, state, blocking=True)
         return step
 
     if ckpt is not None:
-        sup = TrainSupervisor(ckpt)
+        sup = TrainSupervisor(ckpt, backoff=supervisor_backoff,
+                              sleep=sleep, clock=clock,
+                              jitter_seed=jitter_seed)
         last = sup.run(run_from, steps)
         events = [dataclass_event(e) for e in sup.events]
     else:

@@ -8,6 +8,14 @@ jitted programs (the two compiled artifacts the ``prefill_*`` / ``decode_*``
 dry-run shapes correspond to).
 
 Sampling: greedy or temperature; deterministic per (seed, slot, step).
+
+Robustness: each request carries a ``deadline_steps`` budget — one that
+decodes past it is evicted with status ``timed_out`` instead of occupying a
+decode slot forever.  A :class:`~repro.core.faults.FaultInjector` can be
+threaded in to fail prefills/decodes deterministically; failed work retries
+under the :class:`~repro.core.faults.RecoveryPolicy` and a request whose
+retries exhaust completes with status ``error`` — the batch loop never
+stalls on one bad request.
 """
 
 from __future__ import annotations
@@ -19,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.faults import FaultInjector, RecoveryPolicy
 from repro.dist.sharding import ShardingRules
 from repro.models import api as model_api
 from repro.models.config import ModelConfig
@@ -30,9 +39,11 @@ class Request:
     prompt: np.ndarray  # (prompt_len,) int32
     max_new_tokens: int = 32
     temperature: float = 0.0
+    deadline_steps: int | None = None  # decode-step budget (None = engine's)
     # filled by the engine:
     output: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    status: str = "pending"  # -> "ok" | "timed_out" | "error"
 
 
 class ServeEngine:
@@ -45,6 +56,9 @@ class ServeEngine:
         max_len: int = 512,
         rules: ShardingRules | None = None,
         seed: int = 0,
+        deadline_steps: int | None = None,
+        fault_injector: FaultInjector | None = None,
+        recovery: RecoveryPolicy | None = None,
     ):
         self.params = params
         self.cfg = cfg
@@ -52,6 +66,9 @@ class ServeEngine:
         self.max_len = max_len
         self.rules = rules
         self.rng = np.random.default_rng(seed)
+        self.deadline_steps = deadline_steps
+        self.fault_injector = fault_injector
+        self.recovery = recovery or RecoveryPolicy()
 
         self._decode = jax.jit(
             lambda p, tok, st: model_api.decode_step(p, tok, cfg, st, rules)
@@ -62,9 +79,11 @@ class ServeEngine:
         self.state = model_api.init_decode_state(cfg, slots, max_len)
         self.slot_req: list[Request | None] = [None] * slots
         self.slot_tokens = np.zeros((slots,), np.int32)
+        self.slot_age = np.zeros((slots,), np.int64)  # decode steps in slot
         self.queue: list[Request] = []
         self.completed: list[Request] = []
-        self.stats = {"prefill_tokens": 0, "decode_tokens": 0, "steps": 0}
+        self.stats = {"prefill_tokens": 0, "decode_tokens": 0, "steps": 0,
+                      "timed_out": 0, "errors": 0, "retries": 0}
 
     # -- API --------------------------------------------------------------------
 
@@ -82,39 +101,80 @@ class ServeEngine:
 
     # -- internals ----------------------------------------------------------------
 
+    def _finish(self, slot: int, req: Request, status: str) -> None:
+        req.status = status
+        req.done = True
+        self.completed.append(req)
+        self.slot_req[slot] = None
+
     def _fill_slots(self) -> None:
         for s in range(self.slots):
-            if self.slot_req[s] is not None or not self.queue:
-                continue
-            req = self.queue.pop(0)
-            # Prefill this prompt alone (batch=1 prefill, spliced into slot).
-            pcfg_state = model_api.init_decode_state(
-                self.cfg, 1, self.max_len
+            while self.slot_req[s] is None and self.queue:
+                req = self.queue.pop(0)
+                try:
+                    logits, pstate = self._prefill_with_retry(req)
+                except Exception:  # noqa: BLE001 — retries exhausted
+                    self.stats["errors"] += 1
+                    self._finish(s, req, "error")  # slot stays free
+                    continue
+                self.state = _splice_state(self.state, pstate, s)
+                tok = self._sample(logits[0, -1], req)
+                req.output.append(int(tok))
+                self.slot_req[s] = req
+                self.slot_tokens[s] = int(tok)
+                self.slot_age[s] = 0
+                self.stats["prefill_tokens"] += len(req.prompt)
+
+    def _prefill_with_retry(self, req: Request):
+        """Prefill this prompt alone (batch=1, spliced into the slot),
+        retrying injected/transient failures under the recovery policy."""
+        pcfg_state = model_api.init_decode_state(self.cfg, 1, self.max_len)
+        batch = {
+            "tokens": jnp.asarray(req.prompt[None, :], jnp.int32)
+        }
+        if self.cfg.family == "encdec":
+            batch["frames"] = jnp.zeros(
+                (1, self.cfg.enc_frames, self.cfg.d_model),
+                self.cfg.jdtype,
             )
-            batch = {
-                "tokens": jnp.asarray(req.prompt[None, :], jnp.int32)
-            }
-            if self.cfg.family == "encdec":
-                batch["frames"] = jnp.zeros(
-                    (1, self.cfg.enc_frames, self.cfg.d_model),
-                    self.cfg.jdtype,
-                )
-            if self.cfg.family == "vlm":
-                batch["patch_embeds"] = jnp.zeros(
-                    (1, self.cfg.n_patches, self.cfg.d_model),
-                    self.cfg.jdtype,
-                )
-            logits, pstate = self._prefill(self.params, batch, pcfg_state)
-            self.state = _splice_state(self.state, pstate, s)
-            tok = self._sample(logits[0, -1], req)
-            req.output.append(int(tok))
-            self.slot_req[s] = req
-            self.slot_tokens[s] = int(tok)
-            self.stats["prefill_tokens"] += len(req.prompt)
+        if self.cfg.family == "vlm":
+            batch["patch_embeds"] = jnp.zeros(
+                (1, self.cfg.n_patches, self.cfg.d_model),
+                self.cfg.jdtype,
+            )
+        attempt = 0
+        while True:
+            try:
+                if (self.fault_injector is not None
+                        and self.fault_injector.probe(
+                            "request", task=req.rid, site="prefill")):
+                    raise RuntimeError(
+                        f"injected prefill failure: request {req.rid}"
+                    )
+                return self._prefill(self.params, batch, pcfg_state)
+            except Exception:  # noqa: BLE001 — bounded retry
+                attempt += 1
+                if attempt > self.recovery.max_attempts:
+                    raise
+                self.stats["retries"] += 1
 
     def _decode_once(self) -> None:
         toks = jnp.asarray(self.slot_tokens[:, None], jnp.int32)
-        logits, self.state = self._decode(self.params, toks, self.state)
+        attempt = 0
+        while True:
+            try:
+                if (self.fault_injector is not None
+                        and self.fault_injector.probe(
+                            "decode", site="decode_step")):
+                    raise RuntimeError("injected decode-batch failure")
+                logits, state = self._decode(self.params, toks, self.state)
+                break
+            except Exception:  # noqa: BLE001 — bounded retry
+                attempt += 1
+                if attempt > self.recovery.max_attempts:
+                    raise
+                self.stats["retries"] += 1
+        self.state = state
         self.stats["steps"] += 1
         for s in range(self.slots):
             req = self.slot_req[s]
@@ -123,11 +183,18 @@ class ServeEngine:
             tok = self._sample(logits[s, -1], req)
             req.output.append(int(tok))
             self.slot_tokens[s] = int(tok)
+            self.slot_age[s] += 1
             self.stats["decode_tokens"] += 1
             if len(req.output) >= req.max_new_tokens:
-                req.done = True
-                self.completed.append(req)
-                self.slot_req[s] = None
+                self._finish(s, req, "ok")
+                continue
+            deadline = (req.deadline_steps if req.deadline_steps is not None
+                        else self.deadline_steps)
+            if deadline is not None and self.slot_age[s] >= deadline:
+                # Past its budget: return what we have instead of holding
+                # the slot (and the rest of the queue) hostage.
+                self.stats["timed_out"] += 1
+                self._finish(s, req, "timed_out")
 
     def _sample(self, logits: jax.Array, req: Request) -> int:
         logits = np.asarray(logits, np.float32)

@@ -30,3 +30,11 @@ def rng():
     import numpy as np
 
     return np.random.RandomState(0)
+
+
+@pytest.fixture(scope="session")
+def fault_seed():
+    """Seed for fault-injection tests.  Deterministic default keeps tier-1
+    green; the CI chaos leg sets REPRO_FAULT_SEED to vary the schedules
+    (the recovery properties must hold for *any* seed)."""
+    return int(os.environ.get("REPRO_FAULT_SEED", "0"))

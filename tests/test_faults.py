@@ -1,0 +1,553 @@
+"""Fault injection + lineage-based recovery across the runtime.
+
+Deterministic chaos: every test drives a seeded
+:class:`repro.core.faults.FaultInjector` through the scheduler simulator,
+the launch Context, the checkpoint manager, the train supervisor, and the
+serve engine, and asserts the runtime *recovers* — completes the plan,
+matches the fault-free output, and records what happened in the stats.
+
+The default seed keeps these green in tier-1; the CI chaos leg re-runs
+them with other ``REPRO_FAULT_SEED`` values (see the ``fault_seed``
+fixture) — the recovery properties must hold for any seed.
+"""
+
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ArrayMeta,
+    BlockDist,
+    Context,
+    EvenWork,
+    FaultInjector,
+    HardwareModel,
+    KernelDef,
+    MemoryManager,
+    OutOfMemory,
+    Planner,
+    RecoveryPolicy,
+    Simulator,
+    Tier,
+    Topology,
+    corrupt_transfer,
+    fail_launch,
+    fail_request,
+    fail_step,
+    fail_task,
+    kill_worker,
+    parse,
+    spurious_oom,
+    timeout_transfer,
+)
+from repro.core.plan_ir import ExecutionPlan
+
+pytestmark = pytest.mark.faults
+
+
+def small_hw(**kw):
+    defaults = dict(
+        device_capacity=1e6, host_capacity=1e9, disk_capacity=1e12,
+        host_link_bw=1e9, disk_bw=1e8, task_overhead=1e-6,
+        alloc_cost=1e-6, staging_throttle=1e6,
+    )
+    defaults.update(kw)
+    return HardwareModel(**defaults)
+
+
+def stencil_plan(n=2048, chunk=256, devices=4):
+    ann = parse("global i => read inp[i-1:i+1], write out[i]")
+    planner = Planner(Topology(devices, devices_per_node=2))
+    arrays = {
+        "inp": ArrayMeta("inp", (n,), 4, BlockDist(chunk)),
+        "out": ArrayMeta("out", (n,), 4, BlockDist(chunk)),
+    }
+    return planner.plan_launch("stencil", ann, (n,), EvenWork(), arrays), planner
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector semantics
+# ---------------------------------------------------------------------------
+
+
+class TestFaultInjector:
+    def test_at_fires_on_nth_matching_probe(self):
+        inj = FaultInjector([fail_task(at=2)])
+        assert [inj.probe("task", task=i) for i in range(5)] == [
+            False, False, True, False, False
+        ]
+        assert inj.count("task") == 1
+
+    def test_filters_restrict_matches(self):
+        inj = FaultInjector([fail_task(at=0, worker=1)])
+        assert not inj.probe("task", worker=0)
+        assert inj.probe("task", worker=1)
+        assert not inj.probe("task", worker=1)  # times=1 exhausted
+
+    def test_unlimited_times(self):
+        inj = FaultInjector([fail_request(rid=7, times=0)])
+        assert all(inj.probe("request", task=7) for _ in range(10))
+        assert not inj.probe("request", task=6)
+
+    def test_probabilistic_is_seed_deterministic(self):
+        def draws(seed):
+            inj = FaultInjector(
+                [fail_task(probability=0.5, times=0)], seed=seed
+            )
+            return [inj.probe("task") for _ in range(64)]
+
+        assert draws(3) == draws(3)
+        assert draws(3) != draws(4)
+
+    def test_events_record_site(self):
+        inj = FaultInjector([fail_launch(at=0, label="gemm")])
+        assert not inj.probe("launch", site="stencil")
+        assert inj.probe("launch", site="gemm")
+        assert inj.events[0].site == "gemm"
+
+
+# ---------------------------------------------------------------------------
+# Simulator recovery engine
+# ---------------------------------------------------------------------------
+
+
+class TestSimulatorRecovery:
+    def test_chaos_worker_death_completes_plan(self, fault_seed):
+        """Acceptance: kill 1 of 4 workers mid-plan, inject ≥3 task/transfer
+        faults — the plan still completes (same tasks as the fault-free
+        run), with finite makespan and the recovery trail in stats."""
+        hw = small_hw()
+        lp, _ = stencil_plan()
+        ref = Simulator(hw, 4, flops_per_thread=10.0).run(lp.plan)
+
+        lp2, planner2 = stencil_plan()
+        inj = FaultInjector([
+            kill_worker(worker=1, after=2),
+            fail_task(at=3),
+            fail_task(at=7),
+            timeout_transfer(at=0),
+            corrupt_transfer(at=1),
+        ], seed=fault_seed)
+        sim = Simulator(
+            hw, 4, flops_per_thread=10.0, fault_injector=inj,
+            recovery=RecoveryPolicy(max_attempts=8),
+            chunk_state=planner2.chunk_state, seed=fault_seed,
+        )
+        res = sim.run(lp2.plan)
+
+        # Exactly-once-effectively: every task in the plan completed (the
+        # simulator raises on deadlock/duplicate triggering), matching the
+        # fault-free reference plan.
+        assert res.task_count == ref.task_count == len(lp2.plan.tasks)
+        assert np.isfinite(res.makespan) and res.makespan >= ref.makespan
+        assert res.stats["worker_deaths"] == 1
+        injected = res.stats["task_retries"] + res.stats["transfer_retries"]
+        assert injected >= 3
+        assert res.stats["faults_injected"] >= 3
+        assert res.stats["recovered_tasks"] >= 1
+        assert (res.stats["replica_recoveries"]
+                + res.stats["lineage_replays"]
+                + res.stats["tasks_rescheduled"]) >= 1
+        # The recovery trail is part of SimResult.stats for benchmarks.
+        assert set(res.recovery_stats()) >= {
+            "worker_deaths", "lineage_replays", "recovered_tasks"
+        }
+
+    def test_worker_death_triggers_lineage_replay(self, fault_seed):
+        """A chunk written and read only on the dead worker has no surviving
+        replica — recovery must replay its producer (lineage) on a
+        survivor."""
+        devices = 4
+        n = 1024
+        planner = Planner(Topology(devices, devices_per_node=2))
+        plan = ExecutionPlan(launch_name="chain")
+        arrays1 = {
+            "a": ArrayMeta("a", (n,), 4, BlockDist(n // devices)),
+            "b": ArrayMeta("b", (n,), 4, BlockDist(n // devices)),
+        }
+        planner.plan_launch(
+            "produce", parse("global i => read a[i], write b[i]"),
+            (n,), EvenWork(), arrays1, plan=plan,
+        )
+        arrays2 = {
+            "b": arrays1["b"],
+            "c": ArrayMeta("c", (n,), 4, BlockDist(n // devices)),
+        }
+        planner.plan_launch(
+            "consume", parse("global i => read b[i], write c[i]"),
+            (n,), EvenWork(), arrays2, plan=plan,
+        )
+
+        inj = FaultInjector([kill_worker(worker=1, after=0)],
+                            seed=fault_seed)
+        sim = Simulator(
+            small_hw(), devices, flops_per_thread=10.0, fault_injector=inj,
+            recovery=RecoveryPolicy(max_attempts=8),
+            chunk_state=planner.chunk_state, seed=fault_seed,
+        )
+        res = sim.run(plan)
+        assert res.task_count == len(plan.tasks)
+        assert res.stats["worker_deaths"] == 1
+        assert res.stats["lineage_replays"] >= 1
+
+    def test_spurious_oom_recovers(self, fault_seed):
+        lp, _ = stencil_plan()
+        inj = FaultInjector([spurious_oom(at=2)], seed=fault_seed)
+        sim = Simulator(small_hw(), 4, flops_per_thread=10.0,
+                        fault_injector=inj, seed=fault_seed)
+        res = sim.run(lp.plan)
+        assert res.task_count == len(lp.plan.tasks)
+        assert res.stats["oom_events"] >= 1
+        assert res.stats["recovered_tasks"] >= 1
+
+    def test_genuine_oom_still_surfaces_after_degradation(self):
+        """A working set larger than device memory cannot be recovered —
+        after bounded degradation the real OutOfMemory propagates."""
+        hw = small_hw(device_capacity=1000.0)
+        ann = parse("global i => read inp[i], write out[i]")
+        planner = Planner(Topology(1))
+        arrays = {
+            "inp": ArrayMeta("inp", (1000,), 4, BlockDist(1000)),
+            "out": ArrayMeta("out", (1000,), 4, BlockDist(1000)),
+        }
+        lp = planner.plan_launch("map", ann, (1000,), EvenWork(), arrays)
+        sim = Simulator(hw, 1, fault_injector=FaultInjector(),
+                        recovery=RecoveryPolicy(max_attempts=2))
+        with pytest.raises(OutOfMemory):
+            sim.run(lp.plan)
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        faults=st.lists(
+            st.tuples(
+                st.sampled_from(["task", "transfer_timeout",
+                                 "transfer_corrupt", "oom"]),
+                st.integers(0, 25),
+            ),
+            min_size=0, max_size=5,
+        ),
+        death=st.tuples(st.booleans(), st.integers(0, 3),
+                        st.integers(0, 4)),
+    )
+    def test_any_bounded_fault_schedule_recovers(self, faults, death):
+        """Property: for any seeded schedule with ≤5 injected failures plus
+        at most one worker death, the recovered run executes every task
+        exactly-once-effectively and the makespan stays finite."""
+        seed = int(os.environ.get("REPRO_FAULT_SEED", "0"))
+        ctor = {
+            "task": fail_task,
+            "transfer_timeout": timeout_transfer,
+            "transfer_corrupt": corrupt_transfer,
+            "oom": spurious_oom,
+        }
+        specs = [ctor[kind](at=at) for kind, at in faults]
+        do_kill, victim, after = death
+        if do_kill:
+            specs.append(kill_worker(worker=victim, after=after))
+
+        lp, planner = stencil_plan()
+        inj = FaultInjector(specs, seed=seed)
+        sim = Simulator(
+            small_hw(), 4, flops_per_thread=10.0, fault_injector=inj,
+            recovery=RecoveryPolicy(max_attempts=10),
+            chunk_state=planner.chunk_state, seed=seed,
+        )
+        res = sim.run(lp.plan)
+        assert res.task_count == len(lp.plan.tasks)
+        assert np.isfinite(res.makespan) and res.makespan > 0
+        assert res.stats["recovered_tasks"] <= res.stats["faults_injected"] \
+            + res.stats["tasks_rescheduled"]
+
+
+# ---------------------------------------------------------------------------
+# Memory manager graceful degradation
+# ---------------------------------------------------------------------------
+
+
+class TestOomDegradation:
+    def test_degrade_shrinks_capacity_and_spills(self):
+        mm = MemoryManager(small_hw(device_capacity=1000.0))
+        for i in range(2):
+            mm.register(("a", i), 400)
+            mm.stage([("a", i)])
+            mm.unstage([("a", i)])
+        assert mm.used[Tier.DEVICE] == 800
+        cost = mm.degrade()
+        assert cost is not None and cost > 0
+        assert mm.capacity[Tier.DEVICE] == 750.0
+        assert mm.used[Tier.DEVICE] <= 750.0
+        assert mm.stats["oom_demotions"] == 1
+        assert mm.tier_of(("a", 0)) is Tier.HOST  # LRU victim spilled
+
+    def test_degrade_floors_out(self):
+        mm = MemoryManager(small_hw(device_capacity=1000.0),
+                           min_device_fraction=0.5)
+        assert mm.degrade() is not None  # 750
+        assert mm.degrade() is not None  # 562.5
+        assert mm.degrade() is not None  # clamped to the 500 floor
+        assert mm.degrade() is None  # at the floor: caller must give up
+        assert mm.capacity[Tier.DEVICE] == 500.0
+
+    def test_pinned_chunks_survive_degradation(self):
+        mm = MemoryManager(small_hw(device_capacity=1000.0))
+        mm.register(("a", 0), 900)
+        mm.stage([("a", 0)])  # pinned
+        mm.degrade()
+        assert mm.tier_of(("a", 0)) is Tier.DEVICE
+
+
+# ---------------------------------------------------------------------------
+# Context launch retry — recovered output matches fault-free output
+# ---------------------------------------------------------------------------
+
+
+class TestContextRecovery:
+    def _kernel(self):
+        def body(views, info):
+            return {"y": views["x"] * 2.0 + 1.0}
+
+        return KernelDef.define(
+            "affine", body, "global i => read x[i], write y[i]"
+        )
+
+    def test_launch_retry_matches_fault_free(self, fault_seed):
+        k = self._kernel()
+        x = np.arange(64, dtype=np.float32)
+
+        ref_ctx = Context()
+        xa = ref_ctx.array(x, name="x")
+        ya = ref_ctx.zeros((64,), name="y")
+        ref = ref_ctx.launch(k, grid=(64,), args={"x": xa, "y": ya})
+
+        inj = FaultInjector([fail_launch(at=0), fail_launch(at=2)],
+                            seed=fault_seed)
+        ctx = Context(fault_injector=inj)
+        xb = ctx.array(x, name="x")
+        yb = ctx.zeros((64,), name="y")
+        out = ctx.launch(k, grid=(64,), args={"x": xb, "y": yb})
+        out2 = ctx.launch(k, grid=(64,), args={"x": xb, "y": yb})
+
+        np.testing.assert_array_equal(
+            np.asarray(out["y"].value), np.asarray(ref["y"].value)
+        )
+        kinds = [e["kind"] for e in ctx.fault_events]
+        assert kinds.count("launch_failure") == 2
+        assert kinds.count("launch_recovered") == 2
+        np.testing.assert_array_equal(
+            np.asarray(out2["y"].value), np.asarray(ref["y"].value)
+        )
+
+    def test_exhausted_retries_propagate(self):
+        k = self._kernel()
+        inj = FaultInjector([fail_launch(at=0, times=0)])  # always fails
+        ctx = Context(fault_injector=inj,
+                      recovery=RecoveryPolicy(max_attempts=2))
+        xa = ctx.array(np.ones(8, np.float32), name="x")
+        ya = ctx.zeros((8,), name="y")
+        with pytest.raises(RuntimeError, match="injected launch failure"):
+            ctx.launch(k, grid=(8,), args={"x": xa, "y": ya})
+        assert len(ctx.fault_events) == 3  # initial + 2 retries
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint corruption fallback
+# ---------------------------------------------------------------------------
+
+
+class TestCheckpointRobustness:
+    def _save(self, mgr, step, value):
+        mgr.save(step, {"w": np.full((4,), value, np.float32)},
+                 blocking=True)
+
+    def test_corrupt_manifest_falls_back_to_previous_step(self, tmp_path):
+        from repro.ckpt import CheckpointManager
+
+        mgr = CheckpointManager(str(tmp_path), keep=4)
+        self._save(mgr, 2, 2.0)
+        self._save(mgr, 4, 4.0)
+        manifest = tmp_path / "step_00000004" / "manifest.json"
+        manifest.write_text("{ torn write")
+        assert mgr.latest_step() == 2
+        restored, meta = mgr.restore({"w": np.zeros(4, np.float32)})
+        assert meta["step"] == 2
+        np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                      np.full((4,), 2.0, np.float32))
+
+    def test_corrupt_array_falls_back_to_previous_step(self, tmp_path):
+        from repro.ckpt import CheckpointManager
+
+        mgr = CheckpointManager(str(tmp_path), keep=4)
+        self._save(mgr, 1, 1.0)
+        self._save(mgr, 3, 3.0)
+        npy = tmp_path / "step_00000003" / "w.npy"
+        npy.write_bytes(b"\x00\x01 not numpy")
+        restored, meta = mgr.restore({"w": np.zeros(4, np.float32)})
+        assert meta["step"] == 1
+        assert mgr.skipped and mgr.skipped[0][0] == 3
+
+    def test_all_corrupt_raises_filenotfound(self, tmp_path):
+        from repro.ckpt import CheckpointManager
+
+        mgr = CheckpointManager(str(tmp_path))
+        self._save(mgr, 1, 1.0)
+        (tmp_path / "step_00000001" / "manifest.json").write_text("junk")
+        assert mgr.latest_step() is None
+        with pytest.raises(FileNotFoundError):
+            mgr.restore({"w": np.zeros(4, np.float32)})
+
+    def test_save_leaves_no_tmp_dirs(self, tmp_path):
+        from repro.ckpt import CheckpointManager
+
+        mgr = CheckpointManager(str(tmp_path), keep=1)
+        self._save(mgr, 1, 1.0)
+        self._save(mgr, 2, 2.0)
+        names = sorted(os.listdir(tmp_path))
+        assert names == ["step_00000002"]
+
+
+# ---------------------------------------------------------------------------
+# Supervisor decorrelated jitter
+# ---------------------------------------------------------------------------
+
+
+class TestSupervisorJitter:
+    def _delays(self, jitter_seed, tmp_path, n=4):
+        from repro.ckpt import CheckpointManager
+        from repro.dist.fault import TrainSupervisor
+
+        slept = []
+        sup = TrainSupervisor(
+            CheckpointManager(str(tmp_path)), max_restarts=n,
+            backoff=0.5, max_backoff=30.0, sleep=slept.append,
+            clock=lambda: 0.0, jitter_seed=jitter_seed,
+        )
+
+        def always_fail(start):
+            raise RuntimeError("boom")
+
+        with pytest.raises(RuntimeError):
+            sup.run(always_fail, total_steps=1)
+        return slept
+
+    def test_jitter_is_bounded_and_deterministic(self, tmp_path):
+        a = self._delays(7, tmp_path / "a")
+        b = self._delays(7, tmp_path / "b")
+        assert a == b  # same seed, same schedule
+        assert all(0.5 <= d <= 30.0 for d in a)
+
+    def test_different_seeds_decorrelate(self, tmp_path):
+        a = self._delays(7, tmp_path / "a")
+        b = self._delays(8, tmp_path / "b")
+        assert a != b  # two hosts with different seeds spread out
+
+    def test_event_timestamps_use_injected_clock(self, tmp_path):
+        from repro.ckpt import CheckpointManager
+        from repro.dist.fault import TrainSupervisor
+
+        t = [100.0]
+        sup = TrainSupervisor(CheckpointManager(str(tmp_path)),
+                              clock=lambda: t[0])
+        assert sup.run(lambda start: 5, total_steps=5) == 5
+        assert sup.events[-1].at == 100.0
+
+
+# ---------------------------------------------------------------------------
+# Serve engine: deadlines and per-request failure isolation
+# ---------------------------------------------------------------------------
+
+
+class TestServeRobustness:
+    @pytest.fixture(scope="class")
+    def served(self):
+        import jax
+
+        from repro.configs import get_smoke_config
+        from repro.models import init_params
+
+        cfg = get_smoke_config("gemma-2b")
+        params = init_params(jax.random.key(0), cfg)
+        return cfg, params
+
+    def test_deadline_evicts_with_timed_out_status(self, served):
+        from repro.serve.engine import Request, ServeEngine
+
+        cfg, params = served
+        engine = ServeEngine(params, cfg, slots=2, max_len=64)
+        rng = np.random.default_rng(0)
+        prompt = rng.integers(0, cfg.vocab, 8).astype(np.int32)
+        engine.submit(Request(rid=0, prompt=prompt, max_new_tokens=40,
+                              deadline_steps=3))
+        engine.submit(Request(rid=1, prompt=prompt, max_new_tokens=4))
+        done = {r.rid: r for r in engine.run(max_steps=30)}
+        assert done[0].status == "timed_out"
+        assert len(done[0].output) < 40  # evicted, slot not held hostage
+        assert done[1].status == "ok"
+        assert len(done[1].output) == 4
+        assert engine.stats["timed_out"] == 1
+
+    def test_failed_request_completes_with_error_status(self, served,
+                                                        fault_seed):
+        from repro.serve.engine import Request, ServeEngine
+
+        cfg, params = served
+        inj = FaultInjector([fail_request(rid=1, times=0)], seed=fault_seed)
+        engine = ServeEngine(params, cfg, slots=2, max_len=64,
+                             fault_injector=inj,
+                             recovery=RecoveryPolicy(max_attempts=2))
+        rng = np.random.default_rng(1)
+        for rid in range(3):
+            engine.submit(Request(
+                rid=rid,
+                prompt=rng.integers(0, cfg.vocab, 8).astype(np.int32),
+                max_new_tokens=4,
+            ))
+        done = {r.rid: r for r in engine.run(max_steps=30)}
+        assert len(done) == 3  # the bad request did not stall the batch
+        assert done[1].status == "error" and done[1].output == []
+        assert done[0].status == "ok" and len(done[0].output) == 4
+        assert done[2].status == "ok" and len(done[2].output) == 4
+        assert engine.stats["errors"] == 1
+        assert engine.stats["retries"] >= 2
+
+    def test_transient_decode_fault_retries(self, served, fault_seed):
+        from repro.core.faults import FaultSpec
+        from repro.serve.engine import Request, ServeEngine
+
+        cfg, params = served
+        inj = FaultInjector([FaultSpec("decode", at=1)], seed=fault_seed)
+        engine = ServeEngine(params, cfg, slots=1, max_len=64,
+                             fault_injector=inj)
+        rng = np.random.default_rng(2)
+        engine.submit(Request(
+            rid=0, prompt=rng.integers(0, cfg.vocab, 8).astype(np.int32),
+            max_new_tokens=4,
+        ))
+        done = engine.run(max_steps=30)
+        assert len(done) == 1 and done[0].status == "ok"
+        assert engine.stats["retries"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Training under injected faults (supervisor + real checkpoints)
+# ---------------------------------------------------------------------------
+
+
+class TestTrainChaos:
+    def test_training_restarts_from_checkpoint_under_injected_faults(
+        self, tmp_path, fault_seed
+    ):
+        from repro.launch.train import run_training
+
+        inj = FaultInjector([fail_step(at=6)], seed=fault_seed)
+        res = run_training(
+            "gemma-2b", smoke=True, steps=8, batch=2, seq=32,
+            ckpt_dir=str(tmp_path), ckpt_every=2,
+            fault_injector=inj, supervisor_backoff=0.01,
+            jitter_seed=fault_seed, sleep=lambda d: None,
+        )
+        kinds = [e["kind"] for e in res["events"]]
+        assert "failure" in kinds and "resume" in kinds
+        assert kinds[-1] == "complete"
+        assert res["steps"] >= 8
