@@ -25,23 +25,38 @@ from repro.kernels import (
     spmv_ell,
     wkv6,
 )
+from repro.obs.trace import NULL_TRACER
+
 from .common import row, time_fn
 
 RNG = np.random.RandomState(0)
 
 
-def main() -> list[str]:
+def main(tracer=NULL_TRACER) -> list[str]:
     rows = []
     f32 = lambda *s: jnp.asarray(RNG.randn(*s).astype(np.float32))
+
+    cursor = [0.0]
+
+    def _row(name: str, seconds: float, derived: str = "") -> str:
+        # One complete event per kernel on the bench stream, laid out
+        # back-to-back so the exported timeline shows each kernel's
+        # measured wall time without overlap.  cat "bench" (not
+        # "compute") keeps these host-side timings out of the
+        # simulator's overlap report when traces are combined.
+        tracer.complete(name, cursor[0], seconds, stream="bench",
+                        cat="bench")
+        cursor[0] += seconds
+        return row(name, seconds, derived)
 
     m = 256
     a, b = jnp.abs(f32(m, m)), jnp.abs(f32(m, m))
     t = time_fn(lambda: gemm(a, b, block_m=128, block_n=128, block_k=128))
-    rows.append(row("kernel_gemm_256", t, f"{2 * m**3 / t / 1e9:.2f}GFLOP/s"))
+    rows.append(_row("kernel_gemm_256", t, f"{2 * m**3 / t / 1e9:.2f}GFLOP/s"))
 
     temp, power = jnp.abs(f32(256, 256)) * 50 + 60, jnp.abs(f32(256, 256))
     t = time_fn(lambda: hotspot_step(temp, power, block_rows=64))
-    rows.append(row("kernel_hotspot_256x256", t,
+    rows.append(_row("kernel_hotspot_256x256", t,
                     f"{256 * 256 / t / 1e6:.1f}Mcell/s"))
 
     n = 1 << 16
@@ -49,59 +64,71 @@ def main() -> list[str]:
     k = 1 + jnp.abs(f32(n)) * 99
     tt = 0.25 + jnp.abs(f32(n)) * 9
     t = time_fn(lambda: black_scholes(s, k, tt, block=1 << 14))
-    rows.append(row("kernel_black_scholes_64k", t,
+    rows.append(_row("kernel_black_scholes_64k", t,
                     f"{n / t / 1e6:.1f}Mopt/s"))
 
     pts, cen = jnp.abs(f32(1 << 14, 4)), jnp.abs(f32(40, 4))
     t = time_fn(lambda: kmeans_assign_reduce(pts, cen, block=4096))
-    rows.append(row("kernel_kmeans_16k", t, f"{(1 << 14) / t / 1e6:.1f}Mrec/s"))
+    rows.append(_row("kernel_kmeans_16k", t, f"{(1 << 14) / t / 1e6:.1f}Mrec/s"))
 
     nr, nnz = 1 << 12, 8
     data = jnp.abs(f32(nr, nnz))
     cols = jnp.asarray(RNG.randint(0, nr, (nr, nnz)).astype(np.int32))
     x = jnp.abs(f32(nr))
     t = time_fn(lambda: spmv_ell(data, cols, x, block=1024))
-    rows.append(row("kernel_spmv_4k", t, f"{nr * nnz / t / 1e6:.1f}Mnnz/s"))
+    rows.append(_row("kernel_spmv_4k", t, f"{nr * nnz / t / 1e6:.1f}Mnnz/s"))
 
     t = time_fn(lambda: md5_search(1 << 12, (1, 2, 3, 4), block=1 << 10))
-    rows.append(row("kernel_md5_4k", t, f"{(1 << 12) / t / 1e3:.1f}Khash/s"))
+    rows.append(_row("kernel_md5_4k", t, f"{(1 << 12) / t / 1e3:.1f}Khash/s"))
 
     posm = jnp.abs(f32(512, 4))
     t = time_fn(lambda: nbody_forces(posm, block_i=256, block_j=256))
-    rows.append(row("kernel_nbody_512", t,
+    rows.append(_row("kernel_nbody_512", t,
                     f"{512 * 512 / t / 1e6:.1f}Mpair/s"))
 
     samp = f32(2, 128, 16, 2)
     t = time_fn(lambda: correlate(samp, block_t=64))
-    rows.append(row("kernel_correlator_2x128x16", t, ""))
+    rows.append(_row("kernel_correlator_2x128x16", t, ""))
 
     q, kk, vv = f32(1, 8, 256, 64), f32(1, 2, 256, 64), f32(1, 2, 256, 64)
     t = time_fn(lambda: flash_attention(q, kk, vv, block_q=128, block_k=128))
-    rows.append(row("kernel_flash_attn_256", t, ""))
+    rows.append(_row("kernel_flash_attn_256", t, ""))
 
     qd = f32(4, 8, 64)
     kc, vc = f32(4, 2, 1024, 64), f32(4, 2, 1024, 64)
     t = time_fn(lambda: decode_attention(qd, kc, vc, block_k=256))
-    rows.append(row("kernel_decode_attn_1k", t, ""))
+    rows.append(_row("kernel_decode_attn_1k", t, ""))
 
     r_, k_, v_ = f32(1, 4, 128, 32) * 0.3, f32(1, 4, 128, 32) * 0.3, \
         f32(1, 4, 128, 32) * 0.3
     w_ = jnp.exp(-jnp.exp(f32(1, 4, 128, 32)))
     u_ = f32(4, 32) * 0.3
     t = time_fn(lambda: wkv6(r_, k_, v_, w_, u_, block_t=64))
-    rows.append(row("kernel_wkv6_128", t, ""))
+    rows.append(_row("kernel_wkv6_128", t, ""))
 
     la, gx = -jnp.abs(f32(2, 128, 256)) * 0.1, f32(2, 128, 256)
     t = time_fn(lambda: rg_lru(la, gx, block_t=64, block_d=128))
-    rows.append(row("kernel_rg_lru_128", t, ""))
+    rows.append(_row("kernel_rg_lru_128", t, ""))
 
     z = jnp.abs(f32(1024, 256))
     ra = jnp.asarray(RNG.randint(0, 8, 1024).astype(np.int32))
     ca = jnp.asarray(RNG.randint(0, 6, 256).astype(np.int32))
     t = time_fn(lambda: cluster_sums(z, ra, ca, 8, 6, block_n=256))
-    rows.append(row("kernel_cocluster_sums_1k", t, ""))
+    rows.append(_row("kernel_cocluster_sums_1k", t, ""))
     return rows
 
 
 if __name__ == "__main__":
-    print("\n".join(main()))
+    import argparse
+
+    from repro.obs.trace import Tracer
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="write a Chrome/Perfetto trace of the bench run")
+    cli = ap.parse_args()
+    tracer = Tracer() if cli.trace else NULL_TRACER
+    print("\n".join(main(tracer=tracer)))
+    if cli.trace:
+        tracer.write(cli.trace)
+        print(f"# trace written to {cli.trace}")

@@ -19,6 +19,8 @@ from repro.core import (
     Topology,
     parse,
 )
+from repro.obs.overlap import analyze
+from repro.obs.trace import NULL_TRACER
 
 # K-Means assignment: every record reads the centroids (replicated) and
 # writes its partial sums (reduce).  4 features × f32 = 16 B per record.
@@ -27,11 +29,15 @@ KMEANS_ANN = parse(
 )
 
 
-def run(n_records: int = 1 << 27, chunk_sizes=None, hw=None) -> list[dict]:
+def run(n_records: int = 1 << 27, chunk_sizes=None, hw=None,
+        tracer=NULL_TRACER) -> list[dict]:
     hw = hw or HardwareModel.paper_p100()
     chunk_sizes = chunk_sizes or [
         1 << 18, 1 << 20, 1 << 22, 1 << 24, 1 << 26,
     ]
+    # Trace the middle (plateau) chunk size — one representative timeline
+    # instead of five stacked on the same lanes.
+    traced_chunk = chunk_sizes[len(chunk_sizes) // 2]
     out = []
     for chunk in chunk_sizes:
         planner = Planner(Topology(1))
@@ -45,7 +51,9 @@ def run(n_records: int = 1 << 27, chunk_sizes=None, hw=None) -> list[dict]:
         )
         # Rodinia K-Means: ~3k flops/record (40 clusters × 4 features ×
         # distance math), 16 B/record HBM traffic.
-        sim = Simulator(hw, 1, flops_per_thread=3000.0, bytes_per_thread=16.0)
+        sim = Simulator(hw, 1, flops_per_thread=3000.0, bytes_per_thread=16.0,
+                        tracer=tracer if chunk == traced_chunk
+                        else NULL_TRACER)
         res = sim.run(lp.plan)
         out.append({
             "chunk_bytes": chunk * 16,
@@ -56,9 +64,9 @@ def run(n_records: int = 1 << 27, chunk_sizes=None, hw=None) -> list[dict]:
     return out
 
 
-def main() -> list[str]:
+def main(tracer=NULL_TRACER) -> list[str]:
     rows = []
-    results = run()
+    results = run(tracer=tracer)
     best = max(r["throughput"] for r in results)
     for r in results:
         rows.append(
@@ -69,8 +77,26 @@ def main() -> list[str]:
     # C1 check: the plateau — middle sizes within 25% of best, extremes worse
     mid = results[len(results) // 2]["throughput"]
     assert mid > 0.75 * best, "chunk-size plateau violated"
+    if tracer.enabled:
+        rep = analyze(tracer)
+        rows.append(
+            f"fig10_overlap,{rep.wall * 1e6:.1f},"
+            f"frac={rep.overlap_fraction:.2f}"
+        )
     return rows
 
 
 if __name__ == "__main__":
-    print("\n".join(main()))
+    import argparse
+
+    from repro.obs.trace import Tracer
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="write a Chrome/Perfetto trace of the plateau run")
+    cli = ap.parse_args()
+    tracer = Tracer() if cli.trace else NULL_TRACER
+    print("\n".join(main(tracer=tracer)))
+    if cli.trace:
+        tracer.write(cli.trace)
+        print(f"# trace written to {cli.trace}")

@@ -12,18 +12,33 @@ Prints ``name,us_per_call,derived`` CSV rows:
 * kernel_*  — Pallas kernel microbenchmarks (interpret mode on CPU)
 * roofline  — §Roofline rows from the dry-run artifacts (if present)
 
-Usage: ``PYTHONPATH=src python -m benchmarks.run [--skip-roofline]``
+Usage: ``PYTHONPATH=src python -m benchmarks.run [--skip-roofline]
+[--trace out.json]``
+
+``--trace`` records the fig10 plateau simulation and the kernel
+microbenchmarks into one Chrome trace-event JSON (open in Perfetto or
+``chrome://tracing``) and prints the derived compute/transfer overlap
+report.
 """
 
 from __future__ import annotations
 
-import sys
+import argparse
 import time
 import traceback
 
 
-def main() -> None:
-    sections = []
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-roofline", action="store_true")
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="write a Chrome/Perfetto trace of the traced "
+                         "sections and print the overlap report")
+    cli = ap.parse_args(argv)
+
+    from repro.obs.overlap import analyze
+    from repro.obs.trace import NULL_TRACER, Tracer
+
     from . import (
         bench_kernels,
         paper_fig10_chunksize,
@@ -33,14 +48,17 @@ def main() -> None:
         roofline_table,
     )
 
+    tracer = Tracer() if cli.trace else NULL_TRACER
     sections = [
-        ("fig10 chunk-size sensitivity", paper_fig10_chunksize.main),
+        ("fig10 chunk-size sensitivity",
+         lambda: paper_fig10_chunksize.main(tracer=tracer)),
         ("fig12 throughput + spilling", paper_fig12_throughput.main),
         ("fig15 weak scaling", paper_fig15_scaling.main),
         ("fig16 co-clustering app", paper_fig16_cocluster.main),
-        ("kernel microbenchmarks", bench_kernels.main),
+        ("kernel microbenchmarks",
+         lambda: bench_kernels.main(tracer=tracer)),
     ]
-    if "--skip-roofline" not in sys.argv:
+    if not cli.skip_roofline:
         sections.append(("roofline (dry-run artifacts)", roofline_table.main))
 
     print("name,us_per_call,derived")
@@ -56,6 +74,12 @@ def main() -> None:
             print(f"BENCH-FAIL {title}: {e!r}")
             traceback.print_exc()
         print(f"# ({title}: {time.time() - t0:.1f}s)")
+    if cli.trace:
+        tracer.write(cli.trace)
+        print(f"# trace written to {cli.trace} "
+              f"({len(tracer.events)} events)")
+        for line in analyze(tracer).summary().splitlines():
+            print(f"# {line}")
     if failures:
         raise SystemExit(1)
 

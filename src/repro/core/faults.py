@@ -42,6 +42,8 @@ import os
 import random
 from typing import Iterable, Sequence
 
+from repro.obs.metrics import MetricsRegistry, default_registry
+
 
 @dataclasses.dataclass(frozen=True)
 class FaultSpec:
@@ -93,13 +95,15 @@ class FaultInjector:
     same answer — recovery paths are replayable bug reports, not flakes.
     """
 
-    def __init__(self, specs: Iterable[FaultSpec] = (), seed: int = 0):
+    def __init__(self, specs: Iterable[FaultSpec] = (), seed: int = 0,
+                 *, registry: MetricsRegistry | None = None):
         self.specs: list[FaultSpec] = list(specs)
         self.seed = int(seed)
         self.rng = random.Random(self.seed)
         self.events: list[InjectedFault] = []
         self._seen = [0] * len(self.specs)
         self._fired = [0] * len(self.specs)
+        self._registry = registry
 
     @classmethod
     def from_env(cls, specs: Iterable[FaultSpec] = (),
@@ -129,6 +133,9 @@ class FaultInjector:
                 fired = True
         if fired:
             self.events.append(InjectedFault(kind, worker, task, site))
+            reg = self._registry if self._registry is not None \
+                else default_registry()
+            reg.counter("faults.injected").labels(kind=kind).inc()
         return fired
 
     def count(self, kind: str | None = None) -> int:

@@ -51,6 +51,9 @@ try:  # jax >= 0.8 moved shard_map out of experimental (and renamed
 except ImportError:  # pragma: no cover
     from jax.experimental.shard_map import shard_map
 
+from repro.obs.metrics import MetricsRegistry, default_registry
+from repro.obs.trace import NULL_TRACER
+
 from . import annotations as ann_mod
 from .annotations import Annotation, REDUCE as MODE_REDUCE
 from .dist_array import DistributedArray, make_array
@@ -124,8 +127,15 @@ class Context:
         devices_per_node: int = 4,
         fault_injector: FaultInjector | None = None,
         recovery: RecoveryPolicy | None = None,
+        tracer=None,
+        registry: MetricsRegistry | None = None,
     ):
         self.mesh = mesh
+        # Observability: launches emit plan/execute spans on the ``driver``
+        # stream and count launches/retries/recoveries on the registry
+        # (resolved lazily so ``use_registry`` redirects us too).
+        self.tracer = tracer or NULL_TRACER
+        self._registry = registry
         # Fault tolerance: with an injector threaded in, failed kernel
         # launches retry under `recovery` instead of propagating; every
         # failure/recovery is recorded in `fault_events`.
@@ -147,6 +157,11 @@ class Context:
         self._array_counter = 0
 
     # -- array factory (paper: context.ones / zeros) ---------------------------
+
+    @property
+    def registry(self) -> MetricsRegistry:
+        return self._registry if self._registry is not None \
+            else default_registry()
 
     @property
     def num_devices(self) -> int:
@@ -200,24 +215,32 @@ class Context:
         scalars = dict(scalars or {})
         arrays = {name: a.meta() for name, a in args.items()}
 
-        plan = self.planner.plan_launch(
-            kernel.name, kernel.annotation, grid, work_dist, arrays,
-            block_shape=block_shape, plan=self.plan,
-        )
+        with self.tracer.span(f"plan:{kernel.name}", stream="driver",
+                              cat="sched", grid=list(grid)):
+            plan = self.planner.plan_launch(
+                kernel.name, kernel.annotation, grid, work_dist, arrays,
+                block_shape=block_shape, plan=self.plan,
+            )
         comm = {a.array: a.pattern for a in plan.args}
+        self.registry.counter("launch.count").labels(
+            kernel=kernel.name).inc()
 
-        if self.mesh is None or self.mesh.size == 1:
-            outputs = self._with_recovery(
-                kernel, lambda: self._execute_single(kernel, grid, args,
-                                                     scalars)
-            )
-            in_specs = {n: P() for n in args}
-            out_specs = {n: P() for n in outputs}
-        else:
-            outputs, in_specs, out_specs = self._with_recovery(
-                kernel, lambda: self._execute_mesh(kernel, grid, args,
-                                                   scalars, plan, work_dist)
-            )
+        with self.tracer.span(f"launch:{kernel.name}", stream="driver",
+                              cat="compute", grid=list(grid),
+                              devices=self.num_devices):
+            if self.mesh is None or self.mesh.size == 1:
+                outputs = self._with_recovery(
+                    kernel, lambda: self._execute_single(kernel, grid, args,
+                                                         scalars)
+                )
+                in_specs = {n: P() for n in args}
+                out_specs = {n: P() for n in outputs}
+            else:
+                outputs, in_specs, out_specs = self._with_recovery(
+                    kernel, lambda: self._execute_mesh(kernel, grid, args,
+                                                       scalars, plan,
+                                                       work_dist)
+                )
 
         self.records.append(
             LaunchRecord(plan=plan, in_specs=in_specs, out_specs=out_specs,
@@ -255,6 +278,14 @@ class Context:
                     "kind": "launch_failure", "launch": kernel.name,
                     "attempt": attempt, "error": repr(exc),
                 })
+                self.registry.counter("launch.retries").labels(
+                    kernel=kernel.name).inc()
+                if self.tracer.enabled:
+                    self.tracer.instant(
+                        f"launch_failure:{kernel.name}", ts=self.tracer.now(),
+                        stream="driver", cat="fault",
+                        args={"attempt": attempt},
+                    )
                 if attempt > self.recovery.max_attempts:
                     raise
                 continue
@@ -263,6 +294,8 @@ class Context:
                     "kind": "launch_recovered", "launch": kernel.name,
                     "attempt": attempt,
                 })
+                self.registry.counter("launch.recoveries").labels(
+                    kernel=kernel.name).inc()
             return result
 
     @staticmethod

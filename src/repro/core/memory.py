@@ -27,11 +27,23 @@ import dataclasses
 import enum
 from collections import OrderedDict
 
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NULL_TRACER
+
 
 class Tier(enum.IntEnum):
     DEVICE = 0
     HOST = 1
     DISK = 2
+
+
+#: Per-worker counters the memory manager maintains on the metrics
+#: registry (``mem.<key>``, labeled by worker).  ``MemoryManager.stats``
+#: and ``SimResult.stats`` expose them under these bare keys.
+MEM_STAT_KEYS = (
+    "h2d_bytes", "d2h_bytes", "host2disk_bytes", "disk2host_bytes",
+    "evictions", "pool_misses", "oom_demotions",
+)
 
 
 @dataclasses.dataclass
@@ -84,7 +96,9 @@ class MemoryManager:
 
     def __init__(self, hw: HardwareModel, injector=None, worker: int | None = None,
                  degrade_factor: float = 0.75,
-                 min_device_fraction: float = 0.25):
+                 min_device_fraction: float = 0.25,
+                 registry: MetricsRegistry | None = None,
+                 tracer=None):
         self.hw = hw
         self.injector = injector  # FaultInjector | None (spurious OOMs)
         self.worker = worker
@@ -99,11 +113,41 @@ class MemoryManager:
         self.chunks: dict[tuple[str, int], ChunkInfo] = {}
         # LRU order per tier (front = least recently used).
         self.lru: dict[Tier, OrderedDict] = {t: OrderedDict() for t in Tier}
-        self.stats = {
-            "h2d_bytes": 0.0, "d2h_bytes": 0.0,
-            "host2disk_bytes": 0.0, "disk2host_bytes": 0.0,
-            "evictions": 0, "pool_misses": 0, "oom_demotions": 0,
+        # Observability: counters/gauges live on the (possibly shared)
+        # registry — the scheduler aggregates across workers through the
+        # labeled parents instead of summing dicts by hand.  ``clock`` can
+        # be injected (the simulator points it at simulated time) so the
+        # spill/evict/OOM instants land on the right timeline.
+        self.registry = registry or MetricsRegistry()
+        self.tracer = tracer or NULL_TRACER
+        self.clock = None
+        wl = {"worker": str(worker if worker is not None else 0)}
+        self._stat = {
+            k: self.registry.counter(f"mem.{k}").labels(**wl)
+            for k in MEM_STAT_KEYS
         }
+        self._occupancy = {
+            t: self.registry.gauge("mem.tier_bytes").labels(
+                tier=t.name, **wl
+            )
+            for t in Tier
+        }
+
+    @property
+    def stats(self) -> dict[str, float]:
+        """This worker's counters as a plain dict (compatibility view)."""
+        return {k: c.value() for k, c in self._stat.items()}
+
+    def _ts(self) -> float:
+        return self.clock() if self.clock is not None else self.tracer.now()
+
+    def _event(self, name: str, **args) -> None:
+        if self.tracer.enabled:
+            self.tracer.instant(
+                name, ts=self._ts(),
+                worker=self.worker if self.worker is not None else 0,
+                stream="mem", cat="mem", args=args,
+            )
 
     # -- bookkeeping ---------------------------------------------------------
 
@@ -124,10 +168,12 @@ class MemoryManager:
         info.tier = tier
         self.used[tier] += info.size
         self.lru[tier][info.key] = None
+        self._occupancy[tier].set(self.used[tier])
 
     def _account_remove(self, info: ChunkInfo) -> None:
         self.used[info.tier] -= info.size
         self.lru[info.tier].pop(info.key, None)
+        self._occupancy[info.tier].set(self.used[info.tier])
 
     def touch(self, key: tuple[str, int]) -> None:
         info = self.chunks[key]
@@ -142,6 +188,7 @@ class MemoryManager:
         if self.injector is not None and self.injector.probe(
             "oom", worker=self.worker, site="stage"
         ):
+            self._event("oom", kind="injected")
             raise OutOfMemory("injected: spurious allocation failure")
         total_new = sum(
             self.chunks[k].size for k in keys
@@ -152,6 +199,8 @@ class MemoryManager:
             if c.tier is Tier.DEVICE and c.pinned > 0
         )
         if total_new + pinned_dev > self.capacity[Tier.DEVICE]:
+            self._event("oom", kind="working_set",
+                        bytes=total_new + pinned_dev)
             raise OutOfMemory(
                 f"task working set {total_new + pinned_dev:.3e} B exceeds "
                 f"device capacity {self.capacity[Tier.DEVICE]:.3e} B"
@@ -179,13 +228,13 @@ class MemoryManager:
         if info.tier is Tier.DISK:
             cost += self._make_room(Tier.HOST, info.size)
             cost += info.size / self.hw.disk_bw
-            self.stats["disk2host_bytes"] += info.size
+            self._stat["disk2host_bytes"].inc(info.size)
             self._account_remove(info)
             self._account_add(info, Tier.HOST)
         if info.tier is Tier.HOST:
             cost += self._make_room(Tier.DEVICE, info.size)
             cost += info.size / self.hw.host_link_bw
-            self.stats["h2d_bytes"] += info.size
+            self._stat["h2d_bytes"].inc(info.size)
             self._account_remove(info)
             self._account_add(info, Tier.DEVICE)
         return cost
@@ -198,12 +247,13 @@ class MemoryManager:
                 None,
             )
             if victim_key is None:
+                self._event("oom", kind="all_pinned", tier=tier.name)
                 raise OutOfMemory(
                     f"cannot free {size:.3e} B in {tier.name}: all pinned"
                 )
             victim = self.chunks[victim_key]
             cost += self._demote(victim)
-            self.stats["evictions"] += 1
+            self._stat["evictions"].inc()
         return cost
 
     def _demote(self, info: ChunkInfo) -> float:
@@ -211,10 +261,12 @@ class MemoryManager:
         cost = self._make_room(nxt, info.size)
         if info.tier is Tier.DEVICE:
             cost += info.size / self.hw.host_link_bw
-            self.stats["d2h_bytes"] += info.size
+            self._stat["d2h_bytes"].inc(info.size)
         else:
             cost += info.size / self.hw.disk_bw
-            self.stats["host2disk_bytes"] += info.size
+            self._stat["host2disk_bytes"].inc(info.size)
+        self._event("spill", frm=info.tier.name, to=nxt.name,
+                    bytes=info.size)
         self._account_remove(info)
         self._account_add(info, nxt)
         return cost
@@ -237,7 +289,8 @@ class MemoryManager:
         if new_cap >= cur:
             return None
         self.capacity[Tier.DEVICE] = new_cap
-        self.stats["oom_demotions"] += 1
+        self._stat["oom_demotions"].inc()
+        self._event("degrade", new_capacity=new_cap)
         cost = 0.0
         while self.used[Tier.DEVICE] > new_cap:
             victim_key = next(
@@ -248,7 +301,7 @@ class MemoryManager:
             if victim_key is None:
                 break  # everything pinned; pressure persists but we tried
             cost += self._demote(self.chunks[victim_key])
-            self.stats["evictions"] += 1
+            self._stat["evictions"].inc()
         return cost
 
     # -- introspection --------------------------------------------------------------

@@ -34,6 +34,17 @@ any failure as fatal:
 
 Every recovery action is surfaced in ``SimResult.stats`` so benchmarks can
 report makespan-under-faults next to the fault-free figures.
+
+Observability: all counters live on a :class:`~repro.obs.metrics
+.MetricsRegistry` (``sim.*`` for scheduler counters, ``mem.*`` for the
+per-worker memory managers' labeled children — the registry's parent
+aggregation replaces the old hand-summed per-manager merge).
+``SimResult.stats`` remains a plain dict compatibility view, computed as
+the per-run registry delta.  With a :class:`~repro.obs.trace.Tracer`
+threaded in, every staging transfer, task execution, lineage replay, and
+recovery action lands on a per-worker/per-stream timeline exportable to
+Perfetto; with the default :data:`~repro.obs.trace.NULL_TRACER` no span
+objects are allocated at all.
 """
 
 from __future__ import annotations
@@ -43,8 +54,12 @@ import heapq
 import random
 from typing import Callable
 
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NULL_TRACER
+
 from .faults import FaultInjector, RecoveryPolicy
-from .memory import HardwareModel, MemoryManager, OutOfMemory, Tier
+from .memory import MEM_STAT_KEYS, HardwareModel, MemoryManager, \
+    OutOfMemory, Tier
 from .plan_ir import ExecutionPlan, Task, TaskKind
 
 #: SimResult.stats keys the recovery engine maintains (always present, zero
@@ -54,6 +69,9 @@ RECOVERY_STAT_KEYS = (
     "oom_degradations", "worker_deaths", "tasks_rescheduled",
     "replica_recoveries", "lineage_replays", "recovered_tasks",
 )
+
+#: Scheduler-owned registry counters (``sim.<key>``).
+_SIM_STAT_KEYS = ("stage_wait",) + RECOVERY_STAT_KEYS
 
 
 @dataclasses.dataclass
@@ -84,6 +102,12 @@ _EXECUTOR_FOR = {
 _TRANSFER_KINDS = (TaskKind.COPY, TaskKind.SEND, TaskKind.RECV,
                    TaskKind.SYNC_REPLICAS)
 
+#: Trace category per executor stream (the overlap analyzer's grouping).
+_CAT_FOR_RESOURCE = {
+    "compute": "compute", "h2d": "transfer", "copy": "transfer",
+    "net": "transfer",
+}
+
 
 class Simulator:
     """Event-driven execution of a task DAG against the hardware model."""
@@ -100,6 +124,8 @@ class Simulator:
         recovery: RecoveryPolicy | None = None,
         chunk_state=None,  # planner ChunkStateTable, for lineage lookups
         seed: int = 0,
+        tracer=None,
+        registry: MetricsRegistry | None = None,
     ):
         self.hw = hw
         self.num_workers = num_workers
@@ -111,8 +137,14 @@ class Simulator:
         self.recovery = recovery or RecoveryPolicy()
         self.chunk_state = chunk_state
         self.seed = seed
+        self.tracer = tracer or NULL_TRACER
+        # One registry shared with every worker's memory manager: per-worker
+        # counters are labeled children, so cross-worker totals come from
+        # the parents instead of a hand-summed merge at the end of run().
+        self.registry = registry or MetricsRegistry()
         self.memory = [
-            MemoryManager(hw, injector=fault_injector, worker=i)
+            MemoryManager(hw, injector=fault_injector, worker=i,
+                          registry=self.registry, tracer=self.tracer)
             for i in range(num_workers)
         ]
 
@@ -171,13 +203,19 @@ class Simulator:
                         tier = Tier.HOST  # warm start only while it fits
                     self.memory[w].register(ref.key(), size, tier=tier)
 
+        # Observability: counters on the shared registry; stats becomes the
+        # per-run registry delta at the end (compatibility view).
+        tracer = self.tracer
+        trace_on = tracer.enabled
+        reg = self.registry
+        sim_c = {k: reg.counter(f"sim.{k}") for k in _SIM_STAT_KEYS}
+        reg.counter("sim.tasks_total").inc(len(tasks))
+        snap0 = reg.snapshot()
+
         # Per-worker resource availability times; staging throttle state.
         res_free: dict[tuple[int, str], float] = {}
         staged_bytes = [0.0] * self.num_workers
         busy: dict[str, float] = {}
-        stats: dict[str, float] = {"stage_wait": 0.0}
-        for k in RECOVERY_STAT_KEYS:
-            stats[k] = 0.0
 
         # Recovery state.
         attempts: dict[int, int] = {}  # tid -> failed attempts so far
@@ -202,8 +240,14 @@ class Simulator:
         def fail(tid: int, stat_key: str, extra_delay: float = 0.0) -> None:
             """Schedule a retry with capped-exponential backoff + jitter."""
             attempts[tid] = attempts.get(tid, 0) + 1
-            stats["faults_injected"] += 1
-            stats[stat_key] += 1
+            sim_c["faults_injected"].inc()
+            sim_c[stat_key].inc()
+            if trace_on:
+                tracer.instant(
+                    f"fault:{stat_key}", ts=now, worker=eff(tasks[tid]),
+                    stream="sched", cat="fault",
+                    args={"tid": tid, "attempt": attempts[tid]},
+                )
             if attempts[tid] > policy.max_attempts:
                 raise RuntimeError(
                     f"task {tid} ({tasks[tid].kind.value}) failed "
@@ -221,7 +265,10 @@ class Simulator:
             from repro.dist.fault import HeartbeatMonitor, StragglerMonitor
 
             dead.add(w)
-            stats["worker_deaths"] += 1
+            sim_c["worker_deaths"].inc()
+            if trace_on:
+                tracer.instant("worker_death", ts=now, worker=w,
+                               stream="sched", cat="fault")
             mon = HeartbeatMonitor(num_hosts=self.num_workers)
             for h in range(self.num_workers):
                 if h in dead:
@@ -252,7 +299,7 @@ class Simulator:
             for key in lost:
                 if any(key in self.memory[sv].chunks
                        for sv in range(self.num_workers) if sv not in dead):
-                    stats["replica_recoveries"] += 1
+                    sim_c["replica_recoveries"].inc()
                     continue
                 ptid = None
                 if self.chunk_state is not None:
@@ -294,13 +341,10 @@ class Simulator:
                     continue
                 del inflight_on[tid]
                 epoch[tid] += 1
-                stats["tasks_rescheduled"] += 1
+                sim_c["tasks_rescheduled"].inc()
                 push(now + policy.delay(1, rng), "ready", tid)
             staged_bytes[w] = 0.0
-            if throttled[w]:
-                pending, throttled[w] = throttled[w], []
-                for p in pending:
-                    push(now, "ready", p)
+            release_throttled(w)
 
         for t in tasks:
             if indeg[t.tid] == 0:
@@ -310,6 +354,20 @@ class Simulator:
         completed = 0
         # Deferred tasks waiting on the staging throttle, per worker.
         throttled: dict[int, list[int]] = {w: [] for w in range(self.num_workers)}
+        throttled_since: dict[int, float] = {}  # tid -> when it was deferred
+
+        def release_throttled(w: int) -> None:
+            if not throttled[w]:
+                return
+            pending, throttled[w] = throttled[w], []
+            for p in pending:
+                sim_c["stage_wait"].inc(now - throttled_since.pop(p, now))
+                push(now, "ready", p)
+
+        # Memory managers stamp their spill/evict/OOM instants with the
+        # current simulated time (closure over this loop's ``now``).
+        for m in self.memory:
+            m.clock = lambda: now
 
         while events:
             now, _, kind, tid, ep = heapq.heappop(events)
@@ -327,6 +385,7 @@ class Simulator:
                 if (staged_bytes[w] + footprint > self.hw.staging_throttle
                         and staged_bytes[w] > 0):
                     throttled[w].append(tid)
+                    throttled_since.setdefault(tid, now)
                     continue
                 # Stage chunks (h2d resource serializes transfers).
                 keys = [r.key() for r in list(t.reads) + list(t.writes)
@@ -334,7 +393,7 @@ class Simulator:
                 try:
                     stage_cost = self.memory[w].stage(keys)
                 except OutOfMemory:
-                    stats["oom_events"] += 1
+                    sim_c["oom_events"].inc()
                     if attempts.get(tid, 0) >= policy.max_attempts:
                         raise  # degradation exhausted: surface the real OOM
                     delay = 0.0
@@ -343,7 +402,7 @@ class Simulator:
                         # hammering the same capacity again.
                         spill = self.memory[w].degrade()
                         if spill is not None:
-                            stats["oom_degradations"] += 1
+                            sim_c["oom_degradations"].inc()
                             delay += spill
                     fail(tid, "task_retries", extra_delay=delay)
                     continue
@@ -353,6 +412,12 @@ class Simulator:
                 start = max(now, res_free.get(h2d_key, 0.0))
                 res_free[h2d_key] = start + stage_cost
                 busy["h2d"] = busy.get("h2d", 0.0) + stage_cost
+                if trace_on and stage_cost > 0.0:
+                    tracer.complete(
+                        f"stage:{t.label or t.kind.value}", start, stage_cost,
+                        worker=w, stream="h2d", cat="transfer",
+                        args={"tid": tid, "bytes": footprint},
+                    )
                 push(start + stage_cost, "staged", tid)
 
             elif kind == "staged":
@@ -362,6 +427,14 @@ class Simulator:
                 start = max(now, res_free.get(rkey, 0.0))
                 res_free[rkey] = start + dur
                 busy[resource] = busy.get(resource, 0.0) + dur
+                if trace_on:
+                    tracer.complete(
+                        f"{t.kind.value}:{t.label or tid}", start, dur,
+                        worker=w, stream=resource,
+                        cat=_CAT_FOR_RESOURCE.get(resource, "compute"),
+                        args={"tid": tid,
+                              "attempt": attempts.get(tid, 0)},
+                    )
                 push(start + dur, "done", tid)
 
             elif kind == "done":
@@ -371,11 +444,7 @@ class Simulator:
                 footprint = sum(self.memory[w].chunks[k].size for k in keys)
                 staged_bytes[w] = max(0.0, staged_bytes[w] - footprint)
                 inflight_on.pop(tid, None)
-                # Release throttled tasks.
-                if throttled[w]:
-                    pending, throttled[w] = throttled[w], []
-                    for p in pending:
-                        push(now, "ready", p)
+                release_throttled(w)
 
                 # Did this attempt fail?  (Injected task faults, transfer
                 # timeouts and corruptions are detected at completion.)
@@ -398,7 +467,7 @@ class Simulator:
                 finished.add(tid)
                 completed += 1
                 if attempts.get(tid, 0) > 0:
-                    stats["recovered_tasks"] += 1
+                    sim_c["recovered_tasks"].inc()
                 for s in succ[tid]:
                     indeg[s] -= 1
                     if indeg[s] == 0:
@@ -416,10 +485,17 @@ class Simulator:
                 start = max(now, res_free.get(rkey, 0.0))
                 res_free[rkey] = start + dur
                 busy[resource] = busy.get(resource, 0.0) + dur
+                if trace_on:
+                    tracer.complete(
+                        f"replay:{t.label or tid}", start, dur, worker=w,
+                        stream=resource,
+                        cat=_CAT_FOR_RESOURCE.get(resource, "compute"),
+                        args={"tid": tid},
+                    )
                 push(start + dur, "replay_done", tid)
 
             elif kind == "replay_done":
-                stats["lineage_replays"] += 1
+                sim_c["lineage_replays"].inc()
                 for ref in t.writes:  # recomputed chunk lives here now
                     self.memory[w].register(ref.key(), self._task_size(t),
                                             tier=Tier.HOST)
@@ -428,9 +504,14 @@ class Simulator:
             raise RuntimeError(
                 f"simulation deadlock: {completed}/{len(tasks)} tasks ran"
             )
-        for m in self.memory:
-            for k, v in m.stats.items():
-                stats[k] = stats.get(k, 0.0) + v
+        # Compatibility view: this run's registry delta as a plain dict.
+        # Memory-manager totals come from the labeled parents (``mem.*``)
+        # — the registry aggregates across workers, so nothing is summed
+        # by hand here anymore.
+        delta = MetricsRegistry.diff(reg.snapshot(), snap0)
+        stats = {k: delta.get(f"sim.{k}", 0.0) for k in _SIM_STAT_KEYS}
+        for k in MEM_STAT_KEYS:
+            stats[k] = delta.get(f"mem.{k}", 0.0)
         return SimResult(
             makespan=now, busy=busy, task_count=len(tasks), stats=stats
         )

@@ -29,6 +29,7 @@ from collections import deque
 from typing import Callable
 
 from repro.core.faults import decorrelated_jitter
+from repro.obs.metrics import default_registry
 
 
 @dataclasses.dataclass
@@ -126,6 +127,11 @@ class StragglerMonitor:
             if h.straggler_flags >= self.patience:
                 h.quarantined = True
                 newly.append(h.host)
+                default_registry().counter("dist.quarantines").labels(
+                    host=str(h.host)).inc()
+        if newly:
+            default_registry().gauge("dist.healthy_hosts").set(
+                len(self.monitor.healthy_hosts()))
         return newly
 
     def backup_assignment(self, data_shards: int) -> dict[int, list[int]]:
@@ -214,6 +220,8 @@ class TrainSupervisor:
                     FaultEvent("failure", self._latest_step(), repr(exc),
                                at=self.clock())
                 )
+                default_registry().counter("dist.supervisor_events").labels(
+                    kind="failure").inc()
                 if restarts >= self.max_restarts:
                     raise
                 restarts += 1
@@ -227,9 +235,13 @@ class TrainSupervisor:
                         at=self.clock(),
                     )
                 )
+                default_registry().counter("dist.supervisor_events").labels(
+                    kind="resume").inc()
                 continue
             self.events.append(
                 FaultEvent("complete", last, f"target {total_steps}",
                            at=self.clock())
             )
+            default_registry().counter("dist.supervisor_events").labels(
+                kind="complete").inc()
             return last

@@ -27,6 +27,8 @@ from repro.configs import ARCHS, get_config, get_smoke_config
 from repro.core.faults import FaultInjector
 from repro.data.pipeline import DataConfig, TokenStream
 from repro.dist.fault import HeartbeatMonitor, StragglerMonitor, TrainSupervisor
+from repro.obs.metrics import MetricsRegistry, default_registry
+from repro.obs.trace import NULL_TRACER
 from repro.train.train_loop import init_train_state, make_train_step
 
 
@@ -48,7 +50,11 @@ def run_training(
     jitter_seed: int | None = None,  # decorrelated restart jitter
     clock=time.monotonic,
     sleep=time.sleep,
+    registry: MetricsRegistry | None = None,
+    tracer=None,
 ) -> dict:
+    reg = registry if registry is not None else default_registry()
+    tracer = tracer or NULL_TRACER
     cfg = get_smoke_config(arch) if smoke else get_config(arch)
     data = DataConfig(vocab=cfg.vocab, seq_len=seq, global_batch=batch,
                       seed=seed)
@@ -95,7 +101,18 @@ def run_training(
             loss = float(metrics["loss"])
             losses.append(loss)
             step += 1
-            monitor.beat(0, clock() - t0)
+            dt = clock() - t0
+            reg.counter("train.steps").inc()
+            reg.histogram("train.step_s").observe(dt)
+            if dt > 0:
+                reg.gauge("train.tokens_per_s").set(batch * seq / dt)
+            if tracer.enabled:
+                # t0/dt come from the injected ``clock`` so the trace is
+                # self-consistent (and deterministic when tests fake it).
+                tracer.complete("train.step", t0, dt, stream="train",
+                                cat="compute",
+                                args={"step": step, "loss": loss})
+            monitor.beat(0, dt)
             stragglers.evaluate()
             if armed["fail"] and step == fail_at_step:
                 armed["fail"] = False  # one-shot fault injection

@@ -21,6 +21,7 @@ stalls on one bad request.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable
 
 import jax
@@ -28,6 +29,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.faults import FaultInjector, RecoveryPolicy
+from repro.obs.metrics import MetricsRegistry, default_registry
+from repro.obs.trace import NULL_TRACER
 from repro.dist.sharding import ShardingRules
 from repro.models import api as model_api
 from repro.models.config import ModelConfig
@@ -59,6 +62,9 @@ class ServeEngine:
         deadline_steps: int | None = None,
         fault_injector: FaultInjector | None = None,
         recovery: RecoveryPolicy | None = None,
+        registry: MetricsRegistry | None = None,
+        tracer=None,
+        clock: Callable[[], float] | None = None,
     ):
         self.params = params
         self.cfg = cfg
@@ -69,6 +75,19 @@ class ServeEngine:
         self.deadline_steps = deadline_steps
         self.fault_injector = fault_injector
         self.recovery = recovery or RecoveryPolicy()
+        # Observability: terminal-status request counts, queue depth, and
+        # TTFT / per-decode-step latency histograms.  ``clock`` is injected
+        # for determinism in tests; with a live tracer it defaults to the
+        # tracer's clock so latencies and spans share a timeline.
+        self.tracer = tracer or NULL_TRACER
+        self._registry = registry
+        if clock is not None:
+            self.clock = clock
+        elif self.tracer.enabled:
+            self.clock = self.tracer.now
+        else:
+            self.clock = time.perf_counter
+        self._submit_ts: dict[int, float] = {}
 
         self._decode = jax.jit(
             lambda p, tok, st: model_api.decode_step(p, tok, cfg, st, rules)
@@ -87,8 +106,15 @@ class ServeEngine:
 
     # -- API --------------------------------------------------------------------
 
+    @property
+    def registry(self) -> MetricsRegistry:
+        return self._registry if self._registry is not None \
+            else default_registry()
+
     def submit(self, req: Request) -> None:
         self.queue.append(req)
+        self._submit_ts[req.rid] = self.clock()
+        self.registry.gauge("serve.queue_depth").set(len(self.queue))
 
     def run(self, max_steps: int = 1000) -> list[Request]:
         """Drive until queue + slots drain (or step budget)."""
@@ -101,18 +127,29 @@ class ServeEngine:
 
     # -- internals ----------------------------------------------------------------
 
+    _TERMINAL_STATUS = {"ok": "completed", "timed_out": "timed_out",
+                        "error": "error"}
+
     def _finish(self, slot: int, req: Request, status: str) -> None:
         req.status = status
         req.done = True
         self.completed.append(req)
         self.slot_req[slot] = None
+        self._submit_ts.pop(req.rid, None)
+        self.registry.counter("serve.requests").labels(
+            status=self._TERMINAL_STATUS.get(status, status)).inc()
 
     def _fill_slots(self) -> None:
         for s in range(self.slots):
             while self.slot_req[s] is None and self.queue:
                 req = self.queue.pop(0)
+                self.registry.gauge("serve.queue_depth").set(len(self.queue))
                 try:
-                    logits, pstate = self._prefill_with_retry(req)
+                    with self.tracer.span(f"prefill:r{req.rid}",
+                                          stream="serve", cat="compute",
+                                          rid=req.rid, slot=s,
+                                          prompt_len=len(req.prompt)):
+                        logits, pstate = self._prefill_with_retry(req)
                 except Exception:  # noqa: BLE001 — retries exhausted
                     self.stats["errors"] += 1
                     self._finish(s, req, "error")  # slot stays free
@@ -120,6 +157,11 @@ class ServeEngine:
                 self.state = _splice_state(self.state, pstate, s)
                 tok = self._sample(logits[0, -1], req)
                 req.output.append(int(tok))
+                # First token out: time-to-first-token for this request.
+                t_submit = self._submit_ts.get(req.rid)
+                if t_submit is not None:
+                    self.registry.histogram("serve.ttft_s").observe(
+                        self.clock() - t_submit)
                 self.slot_req[s] = req
                 self.slot_tokens[s] = int(tok)
                 self.slot_age[s] = 0
@@ -161,19 +203,25 @@ class ServeEngine:
     def _decode_once(self) -> None:
         toks = jnp.asarray(self.slot_tokens[:, None], jnp.int32)
         attempt = 0
-        while True:
-            try:
-                if (self.fault_injector is not None
-                        and self.fault_injector.probe(
-                            "decode", site="decode_step")):
-                    raise RuntimeError("injected decode-batch failure")
-                logits, state = self._decode(self.params, toks, self.state)
-                break
-            except Exception:  # noqa: BLE001 — bounded retry
-                attempt += 1
-                if attempt > self.recovery.max_attempts:
-                    raise
-                self.stats["retries"] += 1
+        t0 = self.clock()
+        with self.tracer.span("decode_step", stream="serve", cat="compute",
+                              step=self.stats["steps"]):
+            while True:
+                try:
+                    if (self.fault_injector is not None
+                            and self.fault_injector.probe(
+                                "decode", site="decode_step")):
+                        raise RuntimeError("injected decode-batch failure")
+                    logits, state = self._decode(self.params, toks,
+                                                 self.state)
+                    break
+                except Exception:  # noqa: BLE001 — bounded retry
+                    attempt += 1
+                    if attempt > self.recovery.max_attempts:
+                        raise
+                    self.stats["retries"] += 1
+        self.registry.histogram("serve.decode_step_s").observe(
+            self.clock() - t0)
         self.state = state
         self.stats["steps"] += 1
         for s in range(self.slots):

@@ -551,3 +551,36 @@ class TestTrainChaos:
         assert "failure" in kinds and "resume" in kinds
         assert kinds[-1] == "complete"
         assert res["steps"] >= 8
+
+
+# ---------------------------------------------------------------------------
+# Observability of injected faults (registry counters vs the event log)
+# ---------------------------------------------------------------------------
+
+
+class TestFaultMetrics:
+    def test_registry_counts_match_injector_event_log(self, fault_seed):
+        """The ``faults.injected`` counter (by kind) must agree exactly
+        with the injector's own ``events`` record, for any chaos seed —
+        dashboards and post-mortems read the registry, tests read the
+        event log, and they must never diverge."""
+        from repro.obs import MetricsRegistry
+
+        lp, _ = stencil_plan()
+        reg = MetricsRegistry()
+        inj = FaultInjector(
+            [
+                fail_task(probability=0.1, times=0),
+                timeout_transfer(probability=0.05, times=0),
+                kill_worker(worker=1, after=1),
+            ],
+            seed=fault_seed, registry=reg,
+        )
+        res = Simulator(small_hw(), 4, fault_injector=inj,
+                        registry=reg).run(lp.plan)
+        assert res.task_count == len(lp.plan.tasks)
+        snap = reg.snapshot()
+        kinds = {e.kind for e in inj.events}
+        for kind in kinds:
+            assert snap[f"faults.injected{{kind={kind}}}"] == inj.count(kind)
+        assert snap.get("faults.injected", 0.0) == len(inj.events)

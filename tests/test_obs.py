@@ -1,0 +1,381 @@
+"""Observability layer (repro.obs): tracer, metrics registry, overlap
+analyzer, and their integration with the scheduler / launch / serve /
+train layers.
+
+The load-bearing properties:
+
+* trace export is **byte-identical** across two identical runs (logical
+  clock, sorted keys, stable ordering) — traces are diffable artifacts;
+* the disabled path allocates nothing (one shared null-span singleton);
+* ``SimResult.stats`` is now a registry snapshot diff but keeps its
+  historical dict shape;
+* the overlap analyzer reproduces an exactly-computable synthetic case
+  and produces sane per-device reports for real multi-worker plans.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ArrayMeta,
+    BlockDist,
+    FaultInjector,
+    HardwareModel,
+    MemoryManager,
+    Planner,
+    EvenWork,
+    Simulator,
+    Tier,
+    Topology,
+    fail_task,
+    parse,
+)
+from repro.core.memory import MEM_STAT_KEYS
+from repro.obs import (
+    NULL_TRACER,
+    MetricsRegistry,
+    Tracer,
+    analyze,
+    default_registry,
+    use_registry,
+    validate_chrome_trace,
+)
+from repro.obs.trace import _NULL_SPAN
+
+
+def small_hw(**kw):
+    defaults = dict(
+        device_capacity=1e6, host_capacity=1e9, disk_capacity=1e12,
+        host_link_bw=1e9, disk_bw=1e8, task_overhead=1e-6,
+        alloc_cost=1e-6, staging_throttle=1e6,
+    )
+    defaults.update(kw)
+    return HardwareModel(**defaults)
+
+
+def stencil_plan(n=2048, chunk=256, devices=4):
+    ann = parse("global i => read inp[i-1:i+1], write out[i]")
+    planner = Planner(Topology(devices, devices_per_node=2))
+    arrays = {
+        "inp": ArrayMeta("inp", (n,), 4, BlockDist(chunk)),
+        "out": ArrayMeta("out", (n,), 4, BlockDist(chunk)),
+    }
+    return planner.plan_launch("stencil", ann, (n,), EvenWork(), arrays)
+
+
+# ---------------------------------------------------------------------------
+# Metrics registry
+# ---------------------------------------------------------------------------
+
+
+class TestMetrics:
+    def test_counter_monotonic(self):
+        reg = MetricsRegistry()
+        c = reg.counter("x")
+        c.inc()
+        c.inc(2.5)
+        assert c.value() == 3.5
+        with pytest.raises(ValueError):
+            c.inc(-1)
+
+    def test_labeled_children_aggregate_into_parent(self):
+        reg = MetricsRegistry()
+        c = reg.counter("tasks")
+        c.labels(worker=0).inc(3)
+        c.labels(worker=1).inc(4)
+        assert c.labels(worker=0) is c.labels(worker=0)  # get-or-create
+        assert c.labels(worker=0).value() == 3
+        assert c.value() == 7  # parent = own + sum(children)
+
+    def test_gauge(self):
+        g = MetricsRegistry().gauge("depth")
+        g.set(5)
+        g.inc()
+        g.dec(2)
+        assert g.value() == 4
+
+    def test_histogram_stats(self):
+        h = MetricsRegistry().histogram("lat", buckets=(0.1, 1.0, 10.0))
+        for v in (0.05, 0.5, 0.5, 5.0):
+            h.observe(v)
+        assert h.count() == 4
+        assert h.sum() == pytest.approx(6.05)
+        assert h.mean() == pytest.approx(6.05 / 4)
+        assert h.quantile(0.5) == 1.0  # bucket upper bound
+        assert h.quantile(1.0) == 10.0
+
+    def test_registry_get_or_create_and_kind_mismatch(self):
+        reg = MetricsRegistry()
+        assert reg.counter("a") is reg.counter("a")
+        with pytest.raises(TypeError):
+            reg.gauge("a")
+
+    def test_snapshot_diff(self):
+        reg = MetricsRegistry()
+        reg.counter("c").labels(k="x").inc(2)
+        before = reg.snapshot()
+        reg.counter("c").labels(k="x").inc(3)
+        reg.counter("c").labels(k="y").inc(1)
+        delta = MetricsRegistry.diff(reg.snapshot(), before)
+        assert delta["c"] == 4
+        assert delta["c{k=x}"] == 3
+        assert delta["c{k=y}"] == 1
+
+    def test_merge_across_registries(self):
+        a, b = MetricsRegistry(), MetricsRegistry()
+        a.counter("n").labels(w=0).inc(1)
+        b.counter("n").labels(w=0).inc(2)
+        b.counter("n").labels(w=1).inc(5)
+        b.histogram("h").observe(0.2)
+        a.merge(b)
+        snap = a.snapshot()
+        assert snap["n"] == 8
+        assert snap["n{w=0}"] == 3
+        assert snap["n{w=1}"] == 5
+        assert snap["h.count"] == 1
+
+    def test_use_registry_swaps_default(self):
+        outer = default_registry()
+        with use_registry() as reg:
+            assert default_registry() is reg
+            default_registry().counter("tmp").inc()
+            assert reg.counter("tmp").value() == 1
+        assert default_registry() is outer
+
+
+# ---------------------------------------------------------------------------
+# Tracer
+# ---------------------------------------------------------------------------
+
+
+class TestTracer:
+    def test_null_tracer_is_zero_cost(self):
+        assert not NULL_TRACER.enabled
+        # every span() answers the same shared singleton — no allocation
+        assert NULL_TRACER.span("a") is NULL_TRACER.span("b")
+        assert NULL_TRACER.span("a") is _NULL_SPAN
+        with NULL_TRACER.span("a") as sp:
+            sp.add(k=1)  # no-op sink
+
+    def test_span_nesting_and_error_annotation(self):
+        tr = Tracer()
+        with tr.span("outer", stream="s"):
+            with tr.span("inner", stream="s"):
+                pass
+        with pytest.raises(RuntimeError):
+            with tr.span("bad", stream="s"):
+                raise RuntimeError("boom")
+        names = {e["name"]: e for e in tr.events}
+        assert set(names) == {"outer", "inner", "bad"}
+        # inner closed before outer; error spans carry the exception type
+        assert names["inner"]["ts"] > names["outer"]["ts"]
+        assert names["bad"]["args"]["error"] == "RuntimeError"
+
+    def test_export_is_valid_chrome_trace(self):
+        tr = Tracer()
+        tr.complete("k", 0.0, 1e-3, worker=1, stream="compute",
+                    cat="compute")
+        tr.instant("f", ts=5e-4, worker=1, stream="sched", cat="fault")
+        obj = tr.to_chrome()
+        assert validate_chrome_trace(obj) == []
+        # metadata names the process/threads for Perfetto's track labels
+        metas = [e for e in obj["traceEvents"] if e["ph"] == "M"]
+        assert {m["name"] for m in metas} == {"process_name", "thread_name"}
+
+    def test_validator_flags_broken_traces(self):
+        assert validate_chrome_trace({}) != []
+        assert validate_chrome_trace({"traceEvents": []}) != []
+        bad_key = {"traceEvents": [{"name": "x", "ph": "X", "ts": 0.0}]}
+        assert any("missing required key" in e
+                   for e in validate_chrome_trace(bad_key))
+        decreasing = {"traceEvents": [
+            {"name": "a", "ph": "i", "ts": 5.0, "pid": 0, "tid": 0},
+            {"name": "b", "ph": "i", "ts": 1.0, "pid": 0, "tid": 0},
+        ]}
+        assert any("non-decreasing" in e
+                   for e in validate_chrome_trace(decreasing))
+
+    def test_traced_sim_export_is_byte_identical(self):
+        """Two identical seeded runs → byte-identical trace JSON (the
+        acceptance bar: no wall-clock reads anywhere in the pipeline)."""
+
+        def one_run() -> str:
+            lp = stencil_plan()
+            tr = Tracer()
+            sim = Simulator(small_hw(), 4, tracer=tr)
+            sim.run(lp.plan)
+            return tr.to_json()
+
+        j1, j2 = one_run(), one_run()
+        assert j1 == j2
+        assert validate_chrome_trace(json.loads(j1)) == []
+
+    def test_text_timeline_renders(self):
+        lp = stencil_plan()
+        tr = Tracer()
+        Simulator(small_hw(), 4, tracer=tr).run(lp.plan)
+        txt = tr.text_timeline()
+        assert "lanes" in txt.splitlines()[0]
+        assert any("compute" in line for line in txt.splitlines())
+
+
+# ---------------------------------------------------------------------------
+# Overlap analyzer
+# ---------------------------------------------------------------------------
+
+
+class TestOverlap:
+    def test_exact_synthetic_case(self):
+        tr = Tracer()
+        tr.complete("k", 0.0, 10.0, worker=0, stream="compute",
+                    cat="compute")
+        tr.complete("x", 5.0, 10.0, worker=0, stream="h2d", cat="transfer")
+        rep = analyze(tr)
+        assert rep.wall == pytest.approx(15.0)
+        d = rep.device(0)
+        assert d.overlap == pytest.approx(5.0)
+        assert d.overlap_fraction == pytest.approx(5.0 / 15.0)
+        assert d.exposed_transfer == pytest.approx(5.0)
+
+    def test_analyzes_exported_chrome_trace_too(self):
+        tr = Tracer()
+        tr.complete("k", 0.0, 10.0, worker=0, stream="compute",
+                    cat="compute")
+        tr.complete("x", 5.0, 10.0, worker=0, stream="h2d", cat="transfer")
+        rep = analyze(json.loads(tr.to_json()))
+        assert rep.device(0).overlap == pytest.approx(5.0)
+
+    def test_multi_worker_plan_report(self):
+        lp = stencil_plan()
+        tr = Tracer()
+        Simulator(small_hw(), 4, tracer=tr).run(lp.plan)
+        rep = analyze(tr)
+        assert len(rep.devices) == 4
+        for d in rep.devices:
+            assert 0.0 <= d.overlap_fraction <= 1.0
+            assert d.busy["compute"] > 0.0
+            assert d.busy["transfer"] > 0.0
+        assert "overlap report" in rep.summary()
+
+
+# ---------------------------------------------------------------------------
+# Runtime integration
+# ---------------------------------------------------------------------------
+
+
+class TestRuntimeIntegration:
+    def test_sim_stats_ride_the_registry(self):
+        lp = stencil_plan()
+        reg = MetricsRegistry()
+        res = Simulator(small_hw(), 4, registry=reg).run(lp.plan)
+        # compat view: same keys/shape as the old hand-summed dicts
+        for k in ("stage_wait",) + tuple(MEM_STAT_KEYS):
+            assert k in res.stats, k
+        assert res.stats["h2d_bytes"] > 0
+        snap = reg.snapshot()
+        assert snap["mem.h2d_bytes"] == res.stats["h2d_bytes"]
+        assert snap["sim.tasks_total"] == len(lp.plan.tasks)
+        # per-worker children present under the parent totals
+        per_worker = [v for k, v in snap.items()
+                      if k.startswith("mem.h2d_bytes{")]
+        assert sum(per_worker) == snap["mem.h2d_bytes"]
+
+    def test_sim_stats_are_per_run_deltas(self):
+        """A shared registry accumulates, but each SimResult.stats only
+        reports its own run (snapshot diff)."""
+        reg = MetricsRegistry()
+        r1 = Simulator(small_hw(), 4, registry=reg).run(stencil_plan().plan)
+        r2 = Simulator(small_hw(), 4, registry=reg).run(stencil_plan().plan)
+        assert r1.stats["h2d_bytes"] == r2.stats["h2d_bytes"]
+        assert reg.snapshot()["mem.h2d_bytes"] == pytest.approx(
+            r1.stats["h2d_bytes"] + r2.stats["h2d_bytes"])
+
+    def test_memory_manager_occupancy_gauges(self):
+        reg = MetricsRegistry()
+        mm = MemoryManager(small_hw(), worker=0, registry=reg)
+        mm.register(("a", 0), 1000, Tier.HOST)
+        mm.stage([("a", 0)])
+        snap = reg.snapshot()
+        assert snap["mem.tier_bytes{tier=DEVICE,worker=0}"] == 1000
+        assert snap["mem.tier_bytes{tier=HOST,worker=0}"] == 0
+        assert mm.stats["h2d_bytes"] == 1000
+
+    def test_failed_tasks_counted_and_marked_in_trace(self):
+        lp = stencil_plan()
+        reg = MetricsRegistry()
+        tr = Tracer()
+        inj = FaultInjector([fail_task(at=0)], registry=reg)
+        res = Simulator(small_hw(), 4, fault_injector=inj, registry=reg,
+                        tracer=tr).run(lp.plan)
+        assert res.stats["task_retries"] == 1
+        assert res.stats["faults_injected"] >= 1
+        assert reg.snapshot()["faults.injected{kind=task}"] == 1
+        assert any(e["name"] == "fault:task_retries" for e in tr.events)
+        assert any(e["name"].startswith("replay:") or
+                   e["args"].get("attempt", 0) > 0
+                   for e in tr.events if e["ph"] == "X")
+
+    def test_launch_context_spans_and_counters(self):
+        import jax.numpy as jnp
+
+        from repro.core import Context, KernelDef
+
+        reg = MetricsRegistry()
+        tr = Tracer()
+        ctx = Context(tracer=tr, registry=reg)
+        k = KernelDef.define(
+            "scale", lambda views, info: {"y": views["x"] * 2.0},
+            "global i => read x[i], write y[i]",
+        )
+        x = ctx.array(jnp.ones(16), name="x")
+        y = ctx.zeros((16,), name="y")
+        out = ctx.launch(k, grid=(16,), args={"x": x, "y": y})
+        assert float(out["y"].value[0]) == 2.0
+        assert reg.snapshot()["launch.count{kernel=scale}"] == 1
+        names = [e["name"] for e in tr.events]
+        assert "plan:scale" in names and "launch:scale" in names
+
+    def test_serve_engine_metrics(self):
+        import jax
+
+        from repro.configs import get_smoke_config
+        from repro.models import init_params
+        from repro.serve.engine import Request, ServeEngine
+
+        cfg = get_smoke_config("gemma-2b")
+        params = init_params(jax.random.key(0), cfg)
+        reg = MetricsRegistry()
+        fake = iter(range(1000))
+        engine = ServeEngine(params, cfg, slots=2, max_len=64,
+                             registry=reg, clock=lambda: float(next(fake)))
+        rng = np.random.default_rng(0)
+        for rid in range(3):
+            engine.submit(Request(
+                rid=rid, prompt=rng.integers(0, cfg.vocab, 8, dtype=np.int64)
+                .astype(np.int32), max_new_tokens=4,
+            ))
+        assert reg.snapshot()["serve.queue_depth"] == 3
+        done = engine.run()
+        assert len(done) == 3
+        snap = reg.snapshot()
+        assert snap["serve.requests{status=completed}"] == 3
+        assert snap["serve.queue_depth"] == 0
+        assert snap["serve.ttft_s.count"] == 3
+        assert snap["serve.decode_step_s.count"] == engine.stats["steps"]
+
+    def test_train_metrics(self, tmp_path):
+        from repro.launch.train import run_training
+
+        reg = MetricsRegistry()
+        fake = iter(range(10000))
+        res = run_training(
+            "gemma-2b", smoke=True, steps=4, batch=2, seq=32,
+            registry=reg, clock=lambda: float(next(fake)),
+        )
+        assert res["steps"] == 4
+        snap = reg.snapshot()
+        assert snap["train.steps"] == 4
+        assert snap["train.step_s.count"] == 4
+        assert snap["train.tokens_per_s"] > 0
