@@ -1,0 +1,218 @@
+"""Machine-readable simulator benchmark — the perf trajectory's data points.
+
+``collect()`` runs four seeded, deterministic simulator benchmarks and
+returns one JSON-able document (schema ``repro.bench_sim/1``):
+
+* ``fig10``      — chunk-size sweep, demand staging vs lookahead prefetching
+  (makespan + obs-derived compute/transfer overlap fraction per chunk size);
+* ``eviction``   — oversubscribed multi-pass scan, LRU vs Belady
+  (future-aware) eviction;
+* ``plan_cache`` — repeated-launch training loop, plan-cache hit rate;
+* ``recovery``   — seeded chaos run (worker death), recovery counters.
+
+``python -m benchmarks.bench_sim --out BENCH_sim.json [--full]`` writes the
+document; ``benchmarks/compare_bench.py`` validates a fresh run against the
+checked-in ``benchmarks/BENCH_sim.json`` baseline (CI ``perf-smoke`` job).
+Everything is deterministic — discrete-event simulation plus fixed fault
+seeds — so baseline comparisons are exact, not statistical.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+from repro.core import (
+    ArrayMeta,
+    BlockDist,
+    BlockWork,
+    FaultInjector,
+    HardwareModel,
+    Planner,
+    RecoveryPolicy,
+    ReplicatedDist,
+    Simulator,
+    Topology,
+    kill_worker,
+    parse,
+)
+from repro.core.plan_ir import ExecutionPlan
+from repro.obs.metrics import MetricsRegistry
+
+from .paper_fig10_chunksize import KMEANS_ANN, run_one
+
+SCHEMA = "repro.bench_sim/1"
+
+# Lookahead depth used for the prefetch-on measurements; results are stable
+# across 4/8/16 (the lead-cap gate, not the window, bounds issue depth).
+PREFETCH_WINDOW = 8
+CHAOS_SEED = 7
+
+
+def _kmeans_arrays(n: int, chunk: int) -> dict[str, ArrayMeta]:
+    return {
+        "points": ArrayMeta("points", (n,), 16, BlockDist(chunk)),
+        "centroids": ArrayMeta("centroids", (40,), 16, ReplicatedDist()),
+        "sums": ArrayMeta("sums", (40,), 16, ReplicatedDist()),
+    }
+
+
+def fig10_section(full: bool) -> list[dict]:
+    """Demand staging vs prefetching over the fig10 chunk-size sweep."""
+    if full:
+        n, chunks = 1 << 27, [1 << 18, 1 << 20, 1 << 22, 1 << 24, 1 << 26]
+    else:
+        n, chunks = 1 << 22, [1 << 13, 1 << 15, 1 << 17, 1 << 19, 1 << 21]
+    out = []
+    for chunk in chunks:
+        base = run_one(n, chunk)
+        pf = run_one(n, chunk, prefetch_window=PREFETCH_WINDOW)
+        out.append({
+            "chunk_bytes": chunk * 16,
+            "baseline": {
+                "makespan_s": base["makespan_s"],
+                "overlap_fraction": base["overlap_fraction"],
+            },
+            "prefetch": {
+                "makespan_s": pf["makespan_s"],
+                "overlap_fraction": pf["overlap_fraction"],
+                "prefetch_issued": pf["prefetch_issued"],
+                "prefetch_hits": pf["prefetch_hits"],
+            },
+        })
+    return out
+
+
+def eviction_section() -> dict:
+    """LRU vs Belady on a 3-pass scan whose working set is ~3× device
+    capacity — the cyclic-reuse pattern where LRU is pessimal (it always
+    evicts the chunk the next pass needs soonest)."""
+    n, chunk, passes = 1 << 20, 1 << 17, 3
+    hw = dataclasses.replace(
+        HardwareModel.paper_p100(),
+        device_capacity=4.5e6,  # ~3 of 8 chunk working sets resident
+        staging_throttle=3.3e6,  # ~2 concurrent task working sets pinned
+    )
+    out = {}
+    for policy in ("lru", "belady"):
+        planner = Planner(Topology(1))
+        plan = ExecutionPlan(launch_name="driver")
+        arrays = _kmeans_arrays(n, chunk)
+        for _ in range(passes):
+            planner.plan_launch("kmeans", KMEANS_ANN, (n,), BlockWork(chunk),
+                                arrays, plan=plan)
+        sim = Simulator(hw, 1, flops_per_thread=3000.0, bytes_per_thread=16.0,
+                        eviction=policy)
+        res = sim.run(plan)
+        out[policy] = {
+            "makespan_s": res.makespan,
+            "evictions": res.stats.get("evictions", 0),
+            "oracle_evictions": res.stats.get("oracle_evictions", 0),
+            "h2d_bytes": res.stats.get("h2d_bytes", 0),
+        }
+    return out
+
+
+def plan_cache_section(steps: int = 20) -> dict:
+    """Training-loop shape: every step re-plans the same two launches (a
+    forward and an update) into one shared plan.  Steady state should be all
+    cache hits — only step 0 pays template construction."""
+    update_ann = parse("global i => read sums[:], write centroids[i]")
+    n, chunk = 1 << 16, 1 << 13
+    reg = MetricsRegistry()
+    planner = Planner(Topology(4, devices_per_node=2), registry=reg)
+    plan = ExecutionPlan(launch_name="driver")
+    arrays = _kmeans_arrays(n, chunk)
+    for _ in range(steps):
+        planner.plan_launch("assign", KMEANS_ANN, (n,), BlockWork(chunk),
+                            arrays, plan=plan)
+        planner.plan_launch("update", update_ann, (40,), BlockWork(10),
+                            arrays, plan=plan)
+    snap = reg.snapshot()
+    hits = snap.get("plan.cache{result=hit}", 0.0)
+    misses = snap.get("plan.cache{result=miss}", 0.0)
+    uncacheable = snap.get("plan.cache{result=uncacheable}", 0.0)
+    lookups = hits + misses + uncacheable
+    return {
+        "launches": 2 * steps,
+        "hits": hits,
+        "misses": misses,
+        "uncacheable": uncacheable,
+        "hit_rate": hits / lookups if lookups else 0.0,
+        "plan_tasks": len(plan.tasks),
+    }
+
+
+def recovery_section() -> dict:
+    """Seeded chaos: kill 1 of 4 workers mid-plan and report the recovery
+    counters the run needed to still complete every task."""
+    ann = parse("global i => read inp[i-1:i+1], write out[i]")
+    planner = Planner(Topology(4, devices_per_node=2))
+    arrays = {
+        "inp": ArrayMeta("inp", (2048,), 4, BlockDist(256)),
+        "out": ArrayMeta("out", (2048,), 4, BlockDist(256)),
+    }
+    from repro.core import EvenWork
+
+    lp = planner.plan_launch("stencil", ann, (2048,), EvenWork(), arrays)
+    hw = dataclasses.replace(
+        HardwareModel.paper_p100(), device_capacity=1e6, staging_throttle=1e6
+    )
+    inj = FaultInjector([kill_worker(worker=1, after=2)], seed=CHAOS_SEED)
+    sim = Simulator(hw, 4, flops_per_thread=10.0, fault_injector=inj,
+                    recovery=RecoveryPolicy(max_attempts=8),
+                    chunk_state=planner.chunk_state, seed=CHAOS_SEED)
+    res = sim.run(lp.plan)
+    keys = ("worker_deaths", "lineage_replays", "recovered_tasks",
+            "tasks_rescheduled", "replica_recoveries")
+    out = {k: res.stats.get(k, 0) for k in keys}
+    out["makespan_s"] = res.makespan
+    out["task_count"] = res.task_count
+    return out
+
+
+def collect(full: bool = False) -> dict:
+    return {
+        "schema": SCHEMA,
+        "config": {
+            "full": full,
+            "prefetch_window": PREFETCH_WINDOW,
+            "chaos_seed": CHAOS_SEED,
+        },
+        "fig10": fig10_section(full),
+        "eviction": eviction_section(),
+        "plan_cache": plan_cache_section(),
+        "recovery": recovery_section(),
+    }
+
+
+def main(argv: list[str] | None = None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", metavar="OUT.json", default="BENCH_sim.json")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale problem sizes (slow); default is the "
+                         "CI-sized sweep the checked-in baseline uses")
+    cli = ap.parse_args(argv)
+    doc = collect(full=cli.full)
+    with open(cli.out, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {cli.out}")
+    for row in doc["fig10"]:
+        print(f"  chunk {row['chunk_bytes']:>10} B: makespan "
+              f"{row['baseline']['makespan_s']:.6f} -> "
+              f"{row['prefetch']['makespan_s']:.6f} s, overlap "
+              f"{row['baseline']['overlap_fraction']:.3f} -> "
+              f"{row['prefetch']['overlap_fraction']:.3f}")
+    pc = doc["plan_cache"]
+    print(f"  plan cache: {pc['hits']:.0f}/{pc['hits'] + pc['misses']:.0f} "
+          f"hits (rate {pc['hit_rate']:.2f})")
+    ev = doc["eviction"]
+    print(f"  eviction h2d: lru {ev['lru']['h2d_bytes'] / 1e6:.1f} MB, "
+          f"belady {ev['belady']['h2d_bytes'] / 1e6:.1f} MB")
+
+
+if __name__ == "__main__":
+    main()

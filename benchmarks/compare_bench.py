@@ -1,0 +1,155 @@
+"""Validate and compare ``BENCH_sim.json`` documents (CI ``perf-smoke``).
+
+Two layers of checking:
+
+* **schema + invariants** on the new document alone — prefetching must beat
+  demand staging at every chunk size (makespan ≤ baseline, overlap strictly
+  higher), the plan-cache hit rate must stay ≥ 0.9, and Belady must not move
+  more h2d bytes than LRU;
+* **regression vs the checked-in baseline** — makespan may not regress more
+  than ``MAKESPAN_TOLERANCE`` (20%) and the prefetch overlap fraction may
+  not drop by more than ``OVERLAP_TOLERANCE`` at any chunk size.
+
+Usage: ``python -m benchmarks.compare_bench OLD.json NEW.json``; exits
+non-zero with one line per violation.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+SCHEMA = "repro.bench_sim/1"
+MAKESPAN_TOLERANCE = 1.20  # fail if new makespan > old * this
+OVERLAP_TOLERANCE = 1e-9  # fail if new overlap < old - this
+MIN_CACHE_HIT_RATE = 0.9
+
+
+def validate(doc: dict) -> list[str]:
+    """Schema check; returns a list of problems (empty = valid)."""
+    errs = []
+    if doc.get("schema") != SCHEMA:
+        errs.append(f"schema: expected {SCHEMA!r}, got {doc.get('schema')!r}")
+        return errs
+    for section in ("config", "fig10", "eviction", "plan_cache", "recovery"):
+        if section not in doc:
+            errs.append(f"missing section {section!r}")
+    rows = doc.get("fig10", [])
+    if not isinstance(rows, list) or not rows:
+        errs.append("fig10: expected a non-empty list")
+        rows = []
+    for i, row in enumerate(rows):
+        for variant in ("baseline", "prefetch"):
+            v = row.get(variant)
+            if not isinstance(v, dict):
+                errs.append(f"fig10[{i}].{variant}: missing")
+                continue
+            for field in ("makespan_s", "overlap_fraction"):
+                if not isinstance(v.get(field), (int, float)):
+                    errs.append(f"fig10[{i}].{variant}.{field}: not a number")
+        if not isinstance(row.get("chunk_bytes"), (int, float)):
+            errs.append(f"fig10[{i}].chunk_bytes: not a number")
+    for policy in ("lru", "belady"):
+        if not isinstance(doc.get("eviction", {}).get(policy), dict):
+            errs.append(f"eviction.{policy}: missing")
+    pc = doc.get("plan_cache", {})
+    for field in ("hits", "misses", "hit_rate"):
+        if not isinstance(pc.get(field), (int, float)):
+            errs.append(f"plan_cache.{field}: not a number")
+    rec = doc.get("recovery", {})
+    for field in ("worker_deaths", "lineage_replays", "makespan_s"):
+        if not isinstance(rec.get(field), (int, float)):
+            errs.append(f"recovery.{field}: not a number")
+    return errs
+
+
+def check_invariants(doc: dict) -> list[str]:
+    """Perf claims the document itself must satisfy (ISSUE 9 acceptance)."""
+    errs = []
+    for row in doc["fig10"]:
+        cb = row["chunk_bytes"]
+        base, pf = row["baseline"], row["prefetch"]
+        if pf["makespan_s"] > base["makespan_s"]:
+            errs.append(
+                f"fig10 chunk {cb}: prefetch makespan "
+                f"{pf['makespan_s']:.6g} > baseline {base['makespan_s']:.6g}"
+            )
+        if pf["overlap_fraction"] <= base["overlap_fraction"]:
+            errs.append(
+                f"fig10 chunk {cb}: prefetch overlap "
+                f"{pf['overlap_fraction']:.4f} does not improve on baseline "
+                f"{base['overlap_fraction']:.4f}"
+            )
+    pc = doc["plan_cache"]
+    if pc["hit_rate"] < MIN_CACHE_HIT_RATE:
+        errs.append(f"plan_cache hit_rate {pc['hit_rate']:.3f} < "
+                    f"{MIN_CACHE_HIT_RATE}")
+    ev = doc["eviction"]
+    if ev["belady"]["h2d_bytes"] > ev["lru"]["h2d_bytes"]:
+        errs.append("eviction: belady moved more h2d bytes than lru")
+    if doc["recovery"]["worker_deaths"] < 1:
+        errs.append("recovery: chaos run recorded no worker death")
+    return errs
+
+
+def compare(old: dict, new: dict) -> list[str]:
+    """Regression check of ``new`` against the checked-in ``old``."""
+    errs = []
+    old_rows = {r["chunk_bytes"]: r for r in old["fig10"]}
+    for row in new["fig10"]:
+        cb = row["chunk_bytes"]
+        ref = old_rows.get(cb)
+        if ref is None:
+            continue  # sweep changed shape; invariants still apply
+        for variant in ("baseline", "prefetch"):
+            o, n = ref[variant], row[variant]
+            if n["makespan_s"] > o["makespan_s"] * MAKESPAN_TOLERANCE:
+                errs.append(
+                    f"fig10 chunk {cb} {variant}: makespan regressed "
+                    f"{o['makespan_s']:.6g} -> {n['makespan_s']:.6g} "
+                    f"(> {MAKESPAN_TOLERANCE:.0%})"
+                )
+        o, n = ref["prefetch"], row["prefetch"]
+        if n["overlap_fraction"] < o["overlap_fraction"] - OVERLAP_TOLERANCE:
+            errs.append(
+                f"fig10 chunk {cb}: prefetch overlap dropped "
+                f"{o['overlap_fraction']:.4f} -> {n['overlap_fraction']:.4f}"
+            )
+    if new["plan_cache"]["hit_rate"] < old["plan_cache"]["hit_rate"] - 1e-9:
+        errs.append(
+            f"plan_cache hit_rate dropped "
+            f"{old['plan_cache']['hit_rate']:.3f} -> "
+            f"{new['plan_cache']['hit_rate']:.3f}"
+        )
+    return errs
+
+
+def main(argv: list[str] | None = None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("old", help="checked-in baseline BENCH_sim.json")
+    ap.add_argument("new", help="freshly emitted BENCH_sim.json")
+    cli = ap.parse_args(argv)
+    with open(cli.old) as f:
+        old = json.load(f)
+    with open(cli.new) as f:
+        new = json.load(f)
+
+    errs = []
+    for name, doc in (("old", old), ("new", new)):
+        for e in validate(doc):
+            errs.append(f"[schema:{name}] {e}")
+    if not errs:
+        errs += [f"[invariant] {e}" for e in check_invariants(new)]
+        errs += [f"[regression] {e}" for e in compare(old, new)]
+    if errs:
+        for e in errs:
+            print(e, file=sys.stderr)
+        raise SystemExit(1)
+    print(f"OK: {cli.new} passes schema, invariants, and baseline "
+          f"comparison against {cli.old}")
+
+
+if __name__ == "__main__":
+    main()

@@ -4,6 +4,11 @@ Reproduced with the discrete-event simulator on the paper's P100 hardware
 model: a problem just exceeding device memory, swept over chunk sizes.  The
 paper's claim (C1): a wide plateau — too-small chunks pay scheduling
 overhead, too-big chunks can't overlap transfers with compute.
+
+With ``prefetch_window > 0`` the sweep also exercises the overlap engine
+(lookahead staging on the h2d stream, paper §3.3); ``run_one`` reports the
+obs-derived overlap fraction per configuration so prefetch-on vs demand
+staging can be compared directly (see ``benchmarks/bench_sim.py``).
 """
 
 from __future__ import annotations
@@ -20,7 +25,7 @@ from repro.core import (
     parse,
 )
 from repro.obs.overlap import analyze
-from repro.obs.trace import NULL_TRACER
+from repro.obs.trace import NULL_TRACER, Tracer
 
 # K-Means assignment: every record reads the centroids (replicated) and
 # writes its partial sums (reduce).  4 features × f32 = 16 B per record.
@@ -29,8 +34,45 @@ KMEANS_ANN = parse(
 )
 
 
+def run_one(n_records: int, chunk: int, hw: HardwareModel | None = None,
+            prefetch_window: int = 0, eviction: str = "lru",
+            tracer=None) -> dict:
+    """Plan + simulate one chunk size; returns makespan, throughput, and the
+    obs-derived compute/transfer overlap fraction."""
+    hw = hw or HardwareModel.paper_p100()
+    own_tracer = tracer is None
+    tracer = Tracer() if own_tracer else tracer
+    planner = Planner(Topology(1))
+    arrays = {
+        "points": ArrayMeta("points", (n_records,), 16, BlockDist(chunk)),
+        "centroids": ArrayMeta("centroids", (40,), 16, ReplicatedDist()),
+        "sums": ArrayMeta("sums", (40,), 16, ReplicatedDist()),
+    }
+    lp = planner.plan_launch(
+        "kmeans", KMEANS_ANN, (n_records,), BlockWork(chunk), arrays
+    )
+    # Rodinia K-Means: ~3k flops/record (40 clusters × 4 features ×
+    # distance math), 16 B/record HBM traffic.
+    sim = Simulator(hw, 1, flops_per_thread=3000.0, bytes_per_thread=16.0,
+                    tracer=tracer, prefetch_window=prefetch_window,
+                    eviction=eviction)
+    res = sim.run(lp.plan)
+    out = {
+        "chunk_bytes": chunk * 16,
+        "makespan_s": res.makespan,
+        "throughput": n_records / res.makespan,
+        "h2d_gb": res.stats.get("h2d_bytes", 0) / 1e9,
+        "prefetch_issued": res.stats.get("prefetch_issued", 0),
+        "prefetch_hits": res.stats.get("prefetch_hits", 0),
+    }
+    if tracer.enabled:
+        out["overlap_fraction"] = analyze(tracer).overlap_fraction
+    return out
+
+
 def run(n_records: int = 1 << 27, chunk_sizes=None, hw=None,
-        tracer=NULL_TRACER) -> list[dict]:
+        tracer=NULL_TRACER, prefetch_window: int = 0,
+        eviction: str = "lru") -> list[dict]:
     hw = hw or HardwareModel.paper_p100()
     chunk_sizes = chunk_sizes or [
         1 << 18, 1 << 20, 1 << 22, 1 << 24, 1 << 26,
@@ -38,30 +80,12 @@ def run(n_records: int = 1 << 27, chunk_sizes=None, hw=None,
     # Trace the middle (plateau) chunk size — one representative timeline
     # instead of five stacked on the same lanes.
     traced_chunk = chunk_sizes[len(chunk_sizes) // 2]
-    out = []
-    for chunk in chunk_sizes:
-        planner = Planner(Topology(1))
-        arrays = {
-            "points": ArrayMeta("points", (n_records,), 16, BlockDist(chunk)),
-            "centroids": ArrayMeta("centroids", (40,), 16, ReplicatedDist()),
-            "sums": ArrayMeta("sums", (40,), 16, ReplicatedDist()),
-        }
-        lp = planner.plan_launch(
-            "kmeans", KMEANS_ANN, (n_records,), BlockWork(chunk), arrays
-        )
-        # Rodinia K-Means: ~3k flops/record (40 clusters × 4 features ×
-        # distance math), 16 B/record HBM traffic.
-        sim = Simulator(hw, 1, flops_per_thread=3000.0, bytes_per_thread=16.0,
-                        tracer=tracer if chunk == traced_chunk
-                        else NULL_TRACER)
-        res = sim.run(lp.plan)
-        out.append({
-            "chunk_bytes": chunk * 16,
-            "makespan_s": res.makespan,
-            "throughput": n_records / res.makespan,
-            "h2d_gb": res.stats.get("h2d_bytes", 0) / 1e9,
-        })
-    return out
+    return [
+        run_one(n_records, chunk, hw=hw, prefetch_window=prefetch_window,
+                eviction=eviction,
+                tracer=tracer if chunk == traced_chunk else NULL_TRACER)
+        for chunk in chunk_sizes
+    ]
 
 
 def main(tracer=NULL_TRACER) -> list[str]:
@@ -88,8 +112,6 @@ def main(tracer=NULL_TRACER) -> list[str]:
 
 if __name__ == "__main__":
     import argparse
-
-    from repro.obs.trace import Tracer
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--trace", metavar="OUT.json", default=None,

@@ -13,12 +13,17 @@ Prints ``name,us_per_call,derived`` CSV rows:
 * roofline  — §Roofline rows from the dry-run artifacts (if present)
 
 Usage: ``PYTHONPATH=src python -m benchmarks.run [--skip-roofline]
-[--trace out.json]``
+[--trace out.json] [--json BENCH_sim.json]``
 
 ``--trace`` records the fig10 plateau simulation and the kernel
 microbenchmarks into one Chrome trace-event JSON (open in Perfetto or
 ``chrome://tracing``) and prints the derived compute/transfer overlap
 report.
+
+``--json`` additionally emits the machine-readable simulator benchmark
+document (makespan, overlap fraction, eviction/recovery/plan-cache
+counters — see :mod:`benchmarks.bench_sim`) for baseline comparison with
+``benchmarks/compare_bench.py``.
 """
 
 from __future__ import annotations
@@ -34,6 +39,9 @@ def main(argv: list[str] | None = None) -> None:
     ap.add_argument("--trace", metavar="OUT.json", default=None,
                     help="write a Chrome/Perfetto trace of the traced "
                          "sections and print the overlap report")
+    ap.add_argument("--json", metavar="BENCH_sim.json", default=None,
+                    help="emit the machine-readable simulator benchmark "
+                         "document alongside the table")
     cli = ap.parse_args(argv)
 
     from repro.obs.overlap import analyze
@@ -80,6 +88,17 @@ def main(argv: list[str] | None = None) -> None:
               f"({len(tracer.events)} events)")
         for line in analyze(tracer).summary().splitlines():
             print(f"# {line}")
+    if cli.json:
+        import json
+
+        from . import bench_sim
+
+        print("# --- bench_sim (machine-readable) ---")
+        doc = bench_sim.collect()
+        with open(cli.json, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# BENCH_sim document written to {cli.json}")
     if failures:
         raise SystemExit(1)
 

@@ -129,6 +129,7 @@ class Context:
         recovery: RecoveryPolicy | None = None,
         tracer=None,
         registry: MetricsRegistry | None = None,
+        plan_cache: bool = True,
     ):
         self.mesh = mesh
         # Observability: launches emit plan/execute spans on the ``driver``
@@ -149,7 +150,10 @@ class Context:
             self.mesh_axes = tuple(mesh_axes or ())
             num_devices = 1
         self.topology = Topology(num_devices, devices_per_node)
-        self.planner = Planner(self.topology)
+        # Plan caching (repeated launches skip re-planning) shares this
+        # context's registry so hit/miss counters land with the launch ones.
+        self.planner = Planner(self.topology, registry=registry,
+                               cache_plans=plan_cache)
         self.records: list[LaunchRecord] = []
         # One shared plan across launches: the planner stitches consecutive
         # launches with chunk-conflict edges (sequential consistency).

@@ -42,7 +42,8 @@ class Tier(enum.IntEnum):
 #: and ``SimResult.stats`` expose them under these bare keys.
 MEM_STAT_KEYS = (
     "h2d_bytes", "d2h_bytes", "host2disk_bytes", "disk2host_bytes",
-    "evictions", "pool_misses", "oom_demotions",
+    "evictions", "pool_misses", "oom_demotions", "oracle_evictions",
+    "prefetch_bytes",
 )
 
 
@@ -121,6 +122,12 @@ class MemoryManager:
         self.registry = registry or MetricsRegistry()
         self.tracer = tracer or NULL_TRACER
         self.clock = None
+        # Optional future-knowledge eviction oracle (Belady): maps a chunk
+        # key to its next-use distance (larger = used further in the future;
+        # ``None``/``inf`` = never used again).  Installed by the scheduler
+        # from the ExecutionPlan task order; without one, eviction falls
+        # back to pure LRU.
+        self.eviction_oracle = None
         wl = {"worker": str(worker if worker is not None else 0)}
         self._stat = {
             k: self.registry.counter(f"mem.{k}").labels(**wl)
@@ -220,6 +227,22 @@ class MemoryManager:
             if info is not None and info.pinned > 0:
                 info.pinned -= 1
 
+    def prefetch_one(self, key: tuple[str, int]) -> float | None:
+        """Lookahead staging: promote one chunk to DEVICE *without* pinning
+        it, and only into free capacity — a prefetch never evicts resident
+        data (the demand path with its oracle-guided eviction does that).
+        Returns the modeled transfer seconds, or ``None`` when the chunk is
+        unknown, already resident, or does not fit."""
+        info = self.chunks.get(key)
+        if info is None or info.tier is Tier.DEVICE:
+            return None
+        if self.used[Tier.DEVICE] + info.size > self.capacity[Tier.DEVICE]:
+            return None
+        cost = self._promote(info)
+        self.touch(key)
+        self._stat["prefetch_bytes"].inc(info.size)
+        return cost
+
     # -- migration ---------------------------------------------------------------
 
     def _promote(self, info: ChunkInfo) -> float:
@@ -239,13 +262,33 @@ class MemoryManager:
             self._account_add(info, Tier.DEVICE)
         return cost
 
-    def _make_room(self, tier: Tier, size: int) -> float:
-        cost = 0.0
-        while self.used[tier] + size > self.capacity[tier]:
-            victim_key = next(
+    def _victim_key(self, tier: Tier) -> tuple[str, int] | None:
+        """Pick the eviction victim for ``tier``: with no oracle, the
+        least-recently-used unpinned chunk; with a next-use oracle, the
+        unpinned chunk whose next use is furthest in the future (Belady),
+        breaking ties toward LRU order."""
+        oracle = self.eviction_oracle
+        if oracle is None:
+            return next(
                 (k for k in self.lru[tier] if self.chunks[k].pinned == 0),
                 None,
             )
+        best_key, best_dist = None, -1.0
+        for k in self.lru[tier]:  # front = LRU, so ties keep the older one
+            if self.chunks[k].pinned:
+                continue
+            d = oracle(k)
+            d = float("inf") if d is None else float(d)
+            if d > best_dist:
+                best_key, best_dist = k, d
+        if best_key is not None:
+            self._stat["oracle_evictions"].inc()
+        return best_key
+
+    def _make_room(self, tier: Tier, size: int) -> float:
+        cost = 0.0
+        while self.used[tier] + size > self.capacity[tier]:
+            victim_key = self._victim_key(tier)
             if victim_key is None:
                 self._event("oom", kind="all_pinned", tier=tier.name)
                 raise OutOfMemory(
@@ -293,11 +336,7 @@ class MemoryManager:
         self._event("degrade", new_capacity=new_cap)
         cost = 0.0
         while self.used[Tier.DEVICE] > new_cap:
-            victim_key = next(
-                (k for k in self.lru[Tier.DEVICE]
-                 if self.chunks[k].pinned == 0),
-                None,
-            )
+            victim_key = self._victim_key(Tier.DEVICE)
             if victim_key is None:
                 break  # everything pinned; pressure persists but we tried
             cost += self._demote(self.chunks[victim_key])

@@ -104,6 +104,19 @@ class ExecutionPlan:
             self.tasks.append(nt)
         return remap
 
+    def add_from(self, template_task: Task, deps: Sequence[int]) -> Task:
+        """Append a re-numbered copy of a :class:`PlanTemplate` task.  List
+        payloads are copied so the cached template stays immutable."""
+        nt = dataclasses.replace(
+            template_task,
+            tid=len(self.tasks),
+            deps=list(deps),
+            reads=list(template_task.reads),
+            writes=list(template_task.writes),
+        )
+        self.tasks.append(nt)
+        return nt
+
     # -- analysis -------------------------------------------------------------
 
     def by_worker(self, worker: int) -> list[Task]:
@@ -193,6 +206,28 @@ class ArgPlan:
     halo_width: tuple[int, ...] | None = None  # per-axis, for HALO
     comm_bytes: int = 0  # planner's estimate of bytes this arg moves
     note: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanTemplate:
+    """Position-independent recording of one launch's planning, built against
+    a fresh :class:`~repro.core.planner.ChunkStateTable` so task ids start at
+    0 and deps capture only intra-launch structure.  The planner instantiates
+    a template into any shared plan by re-numbering tasks, re-consulting the
+    live chunk-state table for cross-launch conflict edges, and re-emitting
+    the recorded read/write notes — the memoized fast path for the
+    repeated-launch steady state of training/serving loops."""
+
+    name: str
+    tasks: tuple[Task, ...]
+    # (op, ref, template_tid) with op in {"read", "write"}; every note with
+    # tid T was recorded immediately after task T was added, so replay emits
+    # T's notes right after instantiating T and the table evolves exactly as
+    # it would under native planning.
+    note_log: tuple[tuple[str, ChunkRef, int], ...]
+    args: tuple["ArgPlan", ...]
+    num_superblocks: int
+    grid: tuple[int, ...]
 
 
 @dataclasses.dataclass(frozen=True)

@@ -24,7 +24,7 @@ import math
 from typing import Mapping, Sequence
 
 from .annotations import Annotation, REDUCE, WRITE
-from .distributions import Chunk, Distribution, ReplicatedDist
+from .distributions import Chunk, CustomDist, Distribution, ReplicatedDist
 from .ndrange import Region
 from .plan_ir import (
     ArgPlan,
@@ -32,6 +32,7 @@ from .plan_ir import (
     CommPattern,
     ExecutionPlan,
     LaunchPlan,
+    PlanTemplate,
     Task,
     TaskKind,
 )
@@ -68,6 +69,10 @@ class ChunkStateTable:
 
     def __init__(self) -> None:
         self._state: dict[tuple[str, int], ChunkState] = {}
+        # When a list, every note_read/note_write appends ("read"/"write",
+        # ref, tid) — the planner records a launch into a fresh table this
+        # way to build a reusable PlanTemplate.
+        self.note_log: list[tuple[str, ChunkRef, int]] | None = None
 
     def state(self, ref: ChunkRef) -> ChunkState:
         return self._state.setdefault(ref.key(), ChunkState())
@@ -85,12 +90,16 @@ class ChunkStateTable:
 
     def note_read(self, ref: ChunkRef, tid: int) -> None:
         self.state(ref).readers_since_write.append(tid)
+        if self.note_log is not None:
+            self.note_log.append(("read", ref, tid))
 
     def note_write(self, ref: ChunkRef, tid: int) -> None:
         st = self.state(ref)
         st.last_writer = tid
         st.readers_since_write = []
         st.version += 1
+        if self.note_log is not None:
+            self.note_log.append(("write", ref, tid))
 
     # -- lineage lookups (fault recovery) -----------------------------------
 
@@ -127,9 +136,32 @@ class Planner:
     """Builds :class:`LaunchPlan`s and stitches them via a shared
     :class:`ChunkStateTable`."""
 
-    def __init__(self, topology: Topology):
+    def __init__(
+        self,
+        topology: Topology,
+        registry=None,
+        cache_plans: bool = True,
+        cache_capacity: int = 128,
+    ):
         self.topology = topology
         self.chunk_state = ChunkStateTable()
+        # Plan cache: signature → PlanTemplate, LRU-bounded.  Repeated
+        # launches (the steady state of training/serving loops) skip
+        # re-planning and instantiate the memoized template instead.
+        self.cache_plans = cache_plans
+        self._registry = registry
+        self._plan_cache: dict[tuple, PlanTemplate] = {}
+        self._cache_capacity = cache_capacity
+
+    def _cache_counter(self, result: str):
+        # Lazy resolve so ``use_registry`` redirects us too.
+        from ..obs.metrics import default_registry
+
+        reg = self._registry if self._registry is not None \
+            else default_registry()
+        return reg.counter(
+            "plan.cache", help="plan-cache lookups by result"
+        ).labels(result=result)
 
     # -- main entry point ------------------------------------------------------
 
@@ -142,10 +174,9 @@ class Planner:
         arrays: Mapping[str, ArrayMeta],
         block_shape: Sequence[int] | None = None,
         plan: ExecutionPlan | None = None,
+        cache: bool | None = None,
     ) -> LaunchPlan:
-        nd = self.topology.num_devices
         grid = tuple(int(g) for g in grid)
-        superblocks = work_dist.superblocks(grid, nd)
         if plan is None:
             # Standalone plan: task ids restart at 0, so cross-launch chunk
             # state (which stores task ids) must reset too.  Callers that
@@ -153,6 +184,40 @@ class Planner:
             # pass one shared ExecutionPlan — e.g. Context does.
             plan = ExecutionPlan(launch_name=name)
             self.chunk_state = ChunkStateTable()
+        use_cache = self.cache_plans if cache is None else cache
+        if not use_cache:
+            return self._plan_native(name, annotation, grid, work_dist,
+                                     arrays, block_shape, plan)
+        sig = self._plan_signature(name, annotation, grid, work_dist, arrays,
+                                   block_shape)
+        if sig is None:
+            self._cache_counter("uncacheable").inc()
+            return self._plan_native(name, annotation, grid, work_dist,
+                                     arrays, block_shape, plan)
+        tmpl = self._plan_cache.pop(sig, None)
+        if tmpl is not None:
+            self._cache_counter("hit").inc()
+        else:
+            self._cache_counter("miss").inc()
+            tmpl = self._build_template(name, annotation, grid, work_dist,
+                                        arrays, block_shape)
+        self._plan_cache[sig] = tmpl  # (re-)insert at LRU tail
+        while len(self._plan_cache) > self._cache_capacity:
+            self._plan_cache.pop(next(iter(self._plan_cache)))
+        return self._instantiate(tmpl, plan)
+
+    def _plan_native(
+        self,
+        name: str,
+        annotation: Annotation,
+        grid: tuple[int, ...],
+        work_dist: WorkDistribution,
+        arrays: Mapping[str, ArrayMeta],
+        block_shape: Sequence[int] | None,
+        plan: ExecutionPlan,
+    ) -> LaunchPlan:
+        nd = self.topology.num_devices
+        superblocks = work_dist.superblocks(grid, nd)
 
         # Classify every argument once (patterns are superblock-uniform for
         # the distributions we ship; per-superblock deviations fall back to
@@ -256,6 +321,118 @@ class Planner:
             args=tuple(arg_plans),
             num_superblocks=len(superblocks),
             grid=grid,
+        )
+
+    # -- plan caching ----------------------------------------------------------
+
+    def _plan_signature(
+        self,
+        name: str,
+        annotation: Annotation,
+        grid: tuple[int, ...],
+        work_dist: WorkDistribution,
+        arrays: Mapping[str, ArrayMeta],
+        block_shape: Sequence[int] | None,
+    ) -> tuple | None:
+        """Stable cache key covering every planning input, or ``None`` when a
+        component can't be signed (``CustomDist`` wraps arbitrary callables;
+        non-dataclass distributions have address-based reprs that could
+        collide after GC)."""
+        if not dataclasses.is_dataclass(work_dist):
+            return None
+        for meta in arrays.values():
+            if isinstance(meta.dist, CustomDist) \
+                    or not dataclasses.is_dataclass(meta.dist):
+                return None
+        src = getattr(annotation, "source", "")
+        if not src:
+            return None
+        return (
+            name,
+            src,
+            grid,
+            repr(work_dist),
+            tuple(block_shape) if block_shape is not None else None,
+            (self.topology.num_devices, self.topology.devices_per_node),
+            tuple(sorted(
+                (arg, m.name, m.shape, m.dtype_size, repr(m.dist))
+                for arg, m in arrays.items()
+            )),
+        )
+
+    def _build_template(
+        self,
+        name: str,
+        annotation: Annotation,
+        grid: tuple[int, ...],
+        work_dist: WorkDistribution,
+        arrays: Mapping[str, ArrayMeta],
+        block_shape: Sequence[int] | None,
+    ) -> PlanTemplate:
+        """Plan natively into a private plan against a fresh recording
+        chunk-state table: task ids start at 0 and deps capture only
+        intra-launch structure, so the result replays into any shared plan."""
+        saved = self.chunk_state
+        tmpl_plan = ExecutionPlan(launch_name=name)
+        recording = ChunkStateTable()
+        recording.note_log = []
+        self.chunk_state = recording
+        try:
+            lp = self._plan_native(name, annotation, grid, work_dist, arrays,
+                                   block_shape, tmpl_plan)
+        finally:
+            self.chunk_state = saved
+        return PlanTemplate(
+            name=name,
+            tasks=tuple(tmpl_plan.tasks),
+            note_log=tuple(recording.note_log),
+            args=lp.args,
+            num_superblocks=lp.num_superblocks,
+            grid=lp.grid,
+        )
+
+    def _instantiate(self, tmpl: PlanTemplate,
+                     plan: ExecutionPlan) -> LaunchPlan:
+        """Replay a template into ``plan``: re-number tasks, add cross-launch
+        conflict edges from the live chunk-state table, and re-emit the
+        recorded notes so subsequent launches stitch against this one exactly
+        as they would against a natively-planned launch."""
+        notes_by_tid: dict[int, list[tuple[str, ChunkRef]]] = {}
+        for op, ref, tid in tmpl.note_log:
+            notes_by_tid.setdefault(tid, []).append((op, ref))
+        remap: dict[int, int] = {}
+        for tt in tmpl.tasks:
+            base = [remap[d] for d in tt.deps]
+            base_set = set(base)
+            extra: set[int] = set()
+            for ref in tt.reads:
+                if not ref.temp:
+                    extra.update(d for d in self.chunk_state.read_deps(ref)
+                                 if d not in base_set)
+            for ref in tt.writes:
+                if not ref.temp:
+                    extra.update(d for d in self.chunk_state.write_deps(ref)
+                                 if d not in base_set)
+            # Native dep order is preserved when the live table adds nothing;
+            # with cross-launch extras the merged set is sorted — which is
+            # exactly what native planning emits (EXECUTE deps are
+            # sorted(set(...)); staging deps put the earlier-tid writer
+            # first).
+            deps = sorted(base_set | extra) if extra else base
+            nt = plan.add_from(tt, deps)
+            remap[tt.tid] = nt.tid
+            for op, ref in notes_by_tid.get(tt.tid, ()):
+                if op == "read":
+                    self.chunk_state.note_read(ref, nt.tid)
+                else:
+                    self.chunk_state.note_write(ref, nt.tid)
+        plan.validate()
+        return LaunchPlan(
+            name=tmpl.name,
+            plan=plan,
+            args=tmpl.args,
+            num_superblocks=tmpl.num_superblocks,
+            grid=tmpl.grid,
         )
 
     # -- argument classification ----------------------------------------------

@@ -70,8 +70,14 @@ RECOVERY_STAT_KEYS = (
     "replica_recoveries", "lineage_replays", "recovered_tasks",
 )
 
+#: Counters the overlap engine's lookahead prefetcher maintains (always
+#: present, zero when prefetching is off).
+PREFETCH_STAT_KEYS = (
+    "prefetch_issued", "prefetch_bytes", "prefetch_hits", "prefetch_wasted",
+)
+
 #: Scheduler-owned registry counters (``sim.<key>``).
-_SIM_STAT_KEYS = ("stage_wait",) + RECOVERY_STAT_KEYS
+_SIM_STAT_KEYS = ("stage_wait",) + PREFETCH_STAT_KEYS + RECOVERY_STAT_KEYS
 
 
 @dataclasses.dataclass
@@ -80,9 +86,14 @@ class SimResult:
     busy: dict[str, float]  # resource -> busy seconds (summed over workers)
     task_count: int
     stats: dict[str, float]
+    num_workers: int = 1
 
     def utilization(self, resource: str = "compute") -> float:
-        return self.busy.get(resource, 0.0) / self.makespan if self.makespan else 0.0
+        """Fraction of the makespan this resource was busy, averaged over
+        workers (``busy`` sums across workers, so the denominator must
+        scale with worker count or utilization could exceed 1.0)."""
+        denom = self.makespan * max(1, self.num_workers)
+        return self.busy.get(resource, 0.0) / denom if self.makespan else 0.0
 
     def recovery_stats(self) -> dict[str, float]:
         return {k: self.stats.get(k, 0.0) for k in RECOVERY_STAT_KEYS}
@@ -126,8 +137,21 @@ class Simulator:
         seed: int = 0,
         tracer=None,
         registry: MetricsRegistry | None = None,
+        prefetch_window: int = 0,
+        eviction: str = "lru",
     ):
+        if eviction not in ("lru", "belady"):
+            raise ValueError(f"unknown eviction policy {eviction!r}")
         self.hw = hw
+        # Overlap engine (paper §3.3): with ``prefetch_window`` > 0 each
+        # worker looks that many upcoming tasks ahead and issues their
+        # chunk transfers on the h2d stream while compute runs, bounded by
+        # ``hw.staging_throttle``.  The default (0) keeps the original
+        # demand-staging schedule byte-identical.  ``eviction="belady"``
+        # installs a next-use oracle derived from the plan's task order so
+        # the memory manager evicts the chunk used furthest in the future.
+        self.prefetch_window = int(prefetch_window)
+        self.eviction = eviction
         self.num_workers = num_workers
         self.flops_per_thread = flops_per_thread
         self.bytes_per_thread = bytes_per_thread
@@ -227,6 +251,70 @@ class Simulator:
 
         def eff(t: Task) -> int:
             return worker_map[t.worker % self.num_workers]
+
+        # Debug/introspection handles for tests and benchmarks.
+        self.worker_map = worker_map
+        self.replayed_keys: set[tuple[str, int]] = set()
+
+        # Future-aware eviction: derive a per-chunk next-use table from the
+        # plan's task order and install it as the memory managers' Belady
+        # oracle.  ``None`` (never used again) sorts as +inf = evict first;
+        # otherwise the next unfinished task id that touches the chunk is
+        # its "distance".  With eviction="lru" the oracle stays uninstalled
+        # and the managers keep their pure-LRU behaviour.
+        if self.eviction == "belady":
+            next_uses: dict[tuple[str, int], list[int]] = {}
+            for t0 in tasks:
+                for ref in list(t0.reads) + list(t0.writes):
+                    next_uses.setdefault(ref.key(), []).append(t0.tid)
+            use_ptr: dict[tuple[str, int], int] = {}
+
+            def next_use_of(key: tuple[str, int]) -> float | None:
+                lst = next_uses.get(key)
+                if not lst:
+                    return None
+                i = use_ptr.get(key, 0)
+                while i < len(lst) and lst[i] in finished:
+                    i += 1
+                use_ptr[key] = i
+                return None if i >= len(lst) else float(lst[i])
+
+            for m in self.memory:
+                m.eviction_oracle = next_use_of
+        else:
+            for m in self.memory:
+                m.eviction_oracle = None
+
+        # Lookahead prefetcher state: per-worker map of prefetched chunk
+        # key -> modeled transfer-completion time, plus in-flight prefetch
+        # bytes counted against the staging throttle.
+        pf_on = self.prefetch_window > 0
+        # How far ahead of `now` the h2d queue may already reach before the
+        # prefetcher stops issuing: enough to backfill the gap left by one
+        # allocation + bookkeeping, not enough to build a deep queue that
+        # would delay demand staging.
+        pf_lead_cap = 2.0 * (self.hw.alloc_cost + self.hw.task_overhead)
+        prefetched: list[dict[tuple[str, int], float]] = [
+            {} for _ in range(self.num_workers)
+        ]
+        prefetch_bytes = [0.0] * self.num_workers
+        producers: dict[tuple[str, int], list[int]] = {}
+        pf_lists: dict[int, list[int]] = {}
+        pf_ptr: dict[int, int] = {}
+        if pf_on:
+            for t0 in tasks:
+                for ref in t0.writes:
+                    producers.setdefault(ref.key(), []).append(t0.tid)
+
+        def rebuild_pf_lists() -> None:
+            for ww in range(self.num_workers):
+                pf_lists[ww] = []
+                pf_ptr[ww] = 0
+            for t0 in tasks:
+                pf_lists[eff(t0)].append(t0.tid)
+
+        if pf_on:
+            rebuild_pf_lists()
 
         # Event queue: (time, seq, kind, tid, epoch)
         events: list[tuple[float, int, str, int, int]] = []
@@ -344,6 +432,16 @@ class Simulator:
                 sim_c["tasks_rescheduled"].inc()
                 push(now + policy.delay(1, rng), "ready", tid)
             staged_bytes[w] = 0.0
+            self.replayed_keys.update(replayed)
+            if pf_on:
+                # Death invalidates in-flight transfer timing and remaps
+                # task homes: drop every prefetch mark (resident chunks
+                # simply become zero-cost demand stages) and re-derive the
+                # per-worker lookahead order from the new effective homes.
+                for ww in range(self.num_workers):
+                    prefetched[ww].clear()
+                    prefetch_bytes[ww] = 0.0
+                rebuild_pf_lists()
             release_throttled(w)
 
         for t in tasks:
@@ -355,6 +453,7 @@ class Simulator:
         # Deferred tasks waiting on the staging throttle, per worker.
         throttled: dict[int, list[int]] = {w: [] for w in range(self.num_workers)}
         throttled_since: dict[int, float] = {}  # tid -> when it was deferred
+        self.throttled_since = throttled_since  # test/introspection handle
 
         def release_throttled(w: int) -> None:
             if not throttled[w]:
@@ -364,10 +463,82 @@ class Simulator:
                 sim_c["stage_wait"].inc(now - throttled_since.pop(p, now))
                 push(now, "ready", p)
 
+        def upcoming(w: int):
+            """The next ``prefetch_window`` tasks homed on ``w`` (in plan
+            order) that are neither finished nor already staged/running."""
+            lst = pf_lists[w]
+            i = pf_ptr[w]
+            while i < len(lst) and lst[i] in finished:
+                i += 1  # skip (and permanently drop) the finished prefix
+            pf_ptr[w] = i
+            count = 0
+            while i < len(lst) and count < self.prefetch_window:
+                tid2 = lst[i]
+                if tid2 not in finished and tid2 not in inflight_on:
+                    yield tasks[tid2]
+                    count += 1
+                i += 1
+
+        def maybe_prefetch(w: int) -> None:
+            """Issue h2d transfers for upcoming tasks' dependency-satisfied
+            chunks while compute runs.  Three bounds keep lookahead from
+            hurting: the staging throttle (prefetch depth trades against
+            contention, paper §3.3), free device capacity (a prefetch never
+            evicts resident data), and — critically — the prefetcher only
+            *backfills an idle h2d stream*: if the queue has pending work,
+            issuing ahead of it would delay demand traffic, so we wait for
+            the next trigger instead.  One transfer per idle gap gives
+            classic double-buffering without unbounded queue build-up."""
+            if not pf_on or w in dead:
+                return
+            h2d_key = (w, "h2d")
+            mm = self.memory[w]
+            budget = (self.hw.staging_throttle - staged_bytes[w]
+                      - prefetch_bytes[w])
+            lead_cap = pf_lead_cap
+            for t2 in upcoming(w):
+                for ref in list(t2.reads) + list(t2.writes):
+                    if res_free.get(h2d_key, 0.0) > now + lead_cap:
+                        return  # stream busy: never queue far ahead of demand
+                    key = ref.key()
+                    if key in prefetched[w]:
+                        continue
+                    info = mm.chunks.get(key)
+                    if info is None or info.tier is Tier.DEVICE or info.pinned:
+                        continue
+                    prods = producers.get(key)
+                    if prods and any(p != t2.tid and p not in finished
+                                     for p in prods):
+                        continue  # producer pending: data does not exist yet
+                    if info.size > budget:
+                        return  # throttle-bound: stop this round
+                    cost = mm.prefetch_one(key)
+                    if cost is None:
+                        return  # no free device capacity left
+                    budget -= info.size
+                    prefetch_bytes[w] += info.size
+                    start = max(now, res_free.get(h2d_key, 0.0))
+                    res_free[h2d_key] = start + cost
+                    busy["h2d"] = busy.get("h2d", 0.0) + cost
+                    prefetched[w][key] = start + cost
+                    sim_c["prefetch_issued"].inc()
+                    sim_c["prefetch_bytes"].inc(info.size)
+                    if trace_on and cost > 0.0:
+                        tracer.complete(
+                            f"prefetch:{key[0]}", start, cost, worker=w,
+                            stream="h2d", cat="transfer",
+                            args={"tid": t2.tid, "bytes": info.size},
+                        )
+
         # Memory managers stamp their spill/evict/OOM instants with the
         # current simulated time (closure over this loop's ``now``).
         for m in self.memory:
             m.clock = lambda: now
+
+        # Warm the pipeline: with lookahead enabled, input transfers start
+        # at t=0 instead of queueing behind partial-buffer allocations.
+        for ww in range(self.num_workers):
+            maybe_prefetch(ww)
 
         while events:
             now, _, kind, tid, ep = heapq.heappop(events)
@@ -382,14 +553,33 @@ class Simulator:
                     for r in list(t.reads) + list(t.writes)
                     if r.key() in self.memory[w].chunks
                 )
-                if (staged_bytes[w] + footprint > self.hw.staging_throttle
-                        and staged_bytes[w] > 0):
+                keys = [r.key() for r in list(t.reads) + list(t.writes)
+                        if r.key() in self.memory[w].chunks]
+                if pf_on:
+                    # Chunks already prefetched (or in flight on h2d) only
+                    # count once against the throttle; the remainder is
+                    # what this staging would newly put in flight.
+                    consumed = list(dict.fromkeys(
+                        k for k in keys if k in prefetched[w]
+                    ))
+                    new_bytes = footprint - sum(
+                        self.memory[w].chunks[k].size for k in consumed
+                    )
+                    over = (staged_bytes[w] + prefetch_bytes[w] + new_bytes
+                            > self.hw.staging_throttle)
+                else:
+                    consumed = []
+                    over = (staged_bytes[w] + footprint
+                            > self.hw.staging_throttle)
+                if over and staged_bytes[w] > 0:
                     throttled[w].append(tid)
                     throttled_since.setdefault(tid, now)
                     continue
                 # Stage chunks (h2d resource serializes transfers).
-                keys = [r.key() for r in list(t.reads) + list(t.writes)
-                        if r.key() in self.memory[w].chunks]
+                pre_resident = {
+                    k for k in consumed
+                    if self.memory[w].chunks[k].tier is Tier.DEVICE
+                }
                 try:
                     stage_cost = self.memory[w].stage(keys)
                 except OutOfMemory:
@@ -409,16 +599,53 @@ class Simulator:
                 staged_bytes[w] += footprint
                 inflight_on[tid] = w
                 h2d_key = (w, "h2d")
-                start = max(now, res_free.get(h2d_key, 0.0))
-                res_free[h2d_key] = start + stage_cost
-                busy["h2d"] = busy.get("h2d", 0.0) + stage_cost
-                if trace_on and stage_cost > 0.0:
-                    tracer.complete(
-                        f"stage:{t.label or t.kind.value}", start, stage_cost,
-                        worker=w, stream="h2d", cat="transfer",
-                        args={"tid": tid, "bytes": footprint},
-                    )
-                push(start + stage_cost, "staged", tid)
+                if pf_on:
+                    # Consume prefetch marks: the task may not run before
+                    # its prefetched transfers land, but it does not pay
+                    # for them (or queue on h2d) again.  A mark whose chunk
+                    # was evicted before use is a wasted prefetch — the
+                    # stage above already re-paid the transfer.
+                    wait_until = now
+                    for k in consumed:
+                        wait_until = max(wait_until,
+                                         prefetched[w].pop(k, now))
+                        prefetch_bytes[w] = max(
+                            0.0, prefetch_bytes[w]
+                            - self.memory[w].chunks[k].size)
+                        if k in pre_resident:
+                            sim_c["prefetch_hits"].inc()
+                        else:
+                            sim_c["prefetch_wasted"].inc()
+                    if stage_cost > 0.0:
+                        start = max(now, res_free.get(h2d_key, 0.0))
+                        res_free[h2d_key] = start + stage_cost
+                        busy["h2d"] = busy.get("h2d", 0.0) + stage_cost
+                        if trace_on:
+                            tracer.complete(
+                                f"stage:{t.label or t.kind.value}", start,
+                                stage_cost, worker=w, stream="h2d",
+                                cat="transfer",
+                                args={"tid": tid, "bytes": footprint},
+                            )
+                        push(max(start + stage_cost, wait_until),
+                             "staged", tid)
+                    else:
+                        # Fast path: everything already resident — no need
+                        # to queue behind unrelated h2d traffic.
+                        push(max(now, wait_until), "staged", tid)
+                    maybe_prefetch(w)
+                else:
+                    start = max(now, res_free.get(h2d_key, 0.0))
+                    res_free[h2d_key] = start + stage_cost
+                    busy["h2d"] = busy.get("h2d", 0.0) + stage_cost
+                    if trace_on and stage_cost > 0.0:
+                        tracer.complete(
+                            f"stage:{t.label or t.kind.value}", start,
+                            stage_cost, worker=w, stream="h2d",
+                            cat="transfer",
+                            args={"tid": tid, "bytes": footprint},
+                        )
+                    push(start + stage_cost, "staged", tid)
 
             elif kind == "staged":
                 resource = _EXECUTOR_FOR[t.kind]
@@ -436,6 +663,7 @@ class Simulator:
                               "attempt": attempts.get(tid, 0)},
                     )
                 push(start + dur, "done", tid)
+                maybe_prefetch(w)  # compute launched: top up the lookahead
 
             elif kind == "done":
                 keys = [r.key() for r in list(t.reads) + list(t.writes)
@@ -475,6 +703,12 @@ class Simulator:
                 if (injector is not None and w not in dead
                         and injector.probe("worker_death", worker=w)):
                     kill_worker(w)
+                if pf_on:
+                    # A completion can satisfy producers for any worker's
+                    # upcoming tasks (and idle workers get no events of
+                    # their own), so top everyone up.
+                    for ww in range(self.num_workers):
+                        maybe_prefetch(ww)
 
             elif kind == "replay":
                 # Lineage replay: recompute a lost chunk by re-running its
@@ -496,9 +730,24 @@ class Simulator:
 
             elif kind == "replay_done":
                 sim_c["lineage_replays"].inc()
-                for ref in t.writes:  # recomputed chunk lives here now
-                    self.memory[w].register(ref.key(), self._task_size(t),
-                                            tier=Tier.HOST)
+                size = self._task_size(t)
+                for ref in t.writes:
+                    key = ref.key()
+                    # The recompute lands on the producer's remapped worker,
+                    # but pending consumers may have been remapped elsewhere
+                    # (two deaths, different survivors): register the chunk
+                    # on every effective worker that still needs it, or
+                    # their staging would never see it.
+                    homes = {w}
+                    for t2 in tasks:
+                        if t2.tid in finished:
+                            continue
+                        if any(r.key() == key for r in t2.reads):
+                            homes.add(eff(t2))
+                    for home in sorted(homes):
+                        if home in dead:
+                            continue
+                        self.memory[home].register(key, size, tier=Tier.HOST)
 
         if completed != len(tasks):
             raise RuntimeError(
@@ -513,5 +762,6 @@ class Simulator:
         for k in MEM_STAT_KEYS:
             stats[k] = delta.get(f"mem.{k}", 0.0)
         return SimResult(
-            makespan=now, busy=busy, task_count=len(tasks), stats=stats
+            makespan=now, busy=busy, task_count=len(tasks), stats=stats,
+            num_workers=self.num_workers,
         )

@@ -192,6 +192,49 @@ class TestSimulatorRecovery:
         assert res.stats["worker_deaths"] == 1
         assert res.stats["lineage_replays"] >= 1
 
+    def test_replayed_chunk_homes_on_all_pending_consumers(self, fault_seed):
+        """Regression: replay_done used to register the recomputed chunk
+        only on the producer's remapped worker, so a consumer homed on a
+        *different* surviving worker staged against a chunk its memory
+        manager had never heard of.  The recompute must land on every
+        pending consumer's effective worker."""
+        from repro.core.plan_ir import ChunkRef, TaskKind
+
+        plan = ExecutionPlan(launch_name="fanout")
+        # Producer on w1 writes ("a", 0); consumers live on w2 and w3.
+        # Fillers keep the consumers busy until well after the replay
+        # completes, so their staging deterministically races nothing.
+        t0 = plan.add(TaskKind.EXECUTE, 1, writes=[ChunkRef("a", 0)],
+                      bytes=1000, flops=100, label="produce")
+        f2 = plan.add(TaskKind.EXECUTE, 2, flops=5000, label="filler2")
+        f3 = plan.add(TaskKind.EXECUTE, 3, flops=5000, label="filler3")
+        plan.add(TaskKind.EXECUTE, 2, deps=[t0.tid, f2.tid],
+                 reads=[ChunkRef("a", 0)], bytes=1000, flops=100,
+                 label="consume2")
+        plan.add(TaskKind.EXECUTE, 3, deps=[t0.tid, f3.tid],
+                 reads=[ChunkRef("a", 0)], bytes=1000, flops=100,
+                 label="consume3")
+
+        inj = FaultInjector([kill_worker(worker=1, after=0)],
+                            seed=fault_seed)
+        sim = Simulator(
+            small_hw(), 4, flops_per_thread=10.0, fault_injector=inj,
+            recovery=RecoveryPolicy(max_attempts=8), seed=fault_seed,
+        )
+        # The chunk exists only on the producer's worker — no survivor
+        # replica, so recovery must go through lineage replay.
+        sim.memory[1].register(("a", 0), 1000, tier=Tier.HOST)
+        res = sim.run(plan, register_chunks=False)
+
+        assert res.task_count == len(plan.tasks)
+        assert res.stats["worker_deaths"] == 1
+        assert res.stats["lineage_replays"] >= 1
+        assert ("a", 0) in sim.replayed_keys
+        # Both consumers' workers saw the recomputed chunk, not just the
+        # producer's remap target.
+        assert ("a", 0) in sim.memory[2].chunks
+        assert ("a", 0) in sim.memory[3].chunks
+
     def test_spurious_oom_recovers(self, fault_seed):
         lp, _ = stencil_plan()
         inj = FaultInjector([spurious_oom(at=2)], seed=fault_seed)

@@ -1,0 +1,334 @@
+"""Overlap engine (ISSUE 9): lookahead prefetching, future-aware (Belady)
+eviction, plan caching, and the satellite fixes that ride along.
+
+Acceptance claims pinned here:
+
+* with prefetching enabled, the obs-derived compute/transfer overlap
+  fraction strictly improves AND makespan is ≤ the demand-staging baseline
+  at every fig10 chunk size;
+* with prefetching off (the default) the schedule — and its trace export —
+  is byte-identical to the pre-overlap-engine one;
+* plan-cache hit rate ≥ 90% on a repeated-launch training loop, and cached
+  planning produces exactly the plans native planning would;
+* ``SimResult.utilization`` normalizes by worker count;
+* lineage replay homes the recomputed chunk on every pending consumer's
+  effective worker, not just the producer's.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import pytest
+
+from repro.core import (
+    ArrayMeta,
+    BlockDist,
+    BlockWork,
+    CustomDist,
+    EvenWork,
+    FaultInjector,
+    HardwareModel,
+    Planner,
+    RecoveryPolicy,
+    ReplicatedDist,
+    Simulator,
+    Tier,
+    Topology,
+    kill_worker,
+    parse,
+)
+from repro.core.plan_ir import ChunkRef, ExecutionPlan, TaskKind
+from repro.core.scheduler import SimResult
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.overlap import analyze
+from repro.obs.trace import Tracer
+
+KMEANS_ANN = parse(
+    "global i => read points[i], read centroids[:], reduce(+) sums[i]"
+)
+
+
+def kmeans_arrays(n: int, chunk: int) -> dict[str, ArrayMeta]:
+    return {
+        "points": ArrayMeta("points", (n,), 16, BlockDist(chunk)),
+        "centroids": ArrayMeta("centroids", (40,), 16, ReplicatedDist()),
+        "sums": ArrayMeta("sums", (40,), 16, ReplicatedDist()),
+    }
+
+
+def kmeans_plan(n: int, chunk: int, passes: int = 1):
+    planner = Planner(Topology(1))
+    plan = ExecutionPlan(launch_name="driver")
+    arrays = kmeans_arrays(n, chunk)
+    for _ in range(passes):
+        planner.plan_launch("kmeans", KMEANS_ANN, (n,), BlockWork(chunk),
+                            arrays, plan=plan)
+    return plan
+
+
+def simulate(plan, tracer=None, **kw) -> SimResult:
+    sim = Simulator(HardwareModel.paper_p100(), 1, flops_per_thread=3000.0,
+                    bytes_per_thread=16.0, tracer=tracer, **kw)
+    return sim.run(plan)
+
+
+# ---------------------------------------------------------------------------
+# Lookahead prefetching
+# ---------------------------------------------------------------------------
+
+
+class TestPrefetch:
+    def test_overlap_improves_and_makespan_never_regresses(self):
+        """ISSUE 9 acceptance: on the fig10 chunk-size sweep the overlap
+        fraction strictly improves and makespan is ≤ the demand-staging
+        baseline at every chunk size."""
+        n = 1 << 22
+        for chunk in (1 << 13, 1 << 15, 1 << 17, 1 << 19, 1 << 21):
+            tr_b, tr_p = Tracer(), Tracer()
+            base = simulate(kmeans_plan(n, chunk), tracer=tr_b)
+            pf = simulate(kmeans_plan(n, chunk), tracer=tr_p,
+                          prefetch_window=8)
+            assert pf.makespan <= base.makespan, chunk
+            ov_b = analyze(tr_b).overlap_fraction
+            ov_p = analyze(tr_p).overlap_fraction
+            assert ov_p > ov_b, (chunk, ov_b, ov_p)
+
+    def test_off_by_default_trace_byte_identical(self):
+        """A default Simulator and an explicit prefetch_window=0 one produce
+        byte-identical trace JSON — the overlap engine is strictly opt-in."""
+        n, chunk = 1 << 20, 1 << 17
+        tr_default, tr_off = Tracer(), Tracer()
+        simulate(kmeans_plan(n, chunk), tracer=tr_default)
+        simulate(kmeans_plan(n, chunk), tracer=tr_off,
+                 prefetch_window=0, eviction="lru")
+        assert tr_default.to_json() == tr_off.to_json()
+
+    def test_prefetch_counters_consistent(self):
+        n, chunk = 1 << 22, 1 << 17
+        res = simulate(kmeans_plan(n, chunk), prefetch_window=8)
+        issued = res.stats["prefetch_issued"]
+        assert issued > 0
+        assert res.stats["prefetch_hits"] + res.stats["prefetch_wasted"] \
+            <= issued
+        assert res.stats["prefetch_bytes"] > 0
+
+    def test_stats_keys_always_present(self):
+        res = simulate(kmeans_plan(1 << 18, 1 << 16))
+        for k in ("prefetch_issued", "prefetch_bytes", "prefetch_hits",
+                  "prefetch_wasted"):
+            assert res.stats.get(k, None) == 0
+
+    def test_bad_eviction_policy_rejected(self):
+        with pytest.raises(ValueError):
+            Simulator(HardwareModel.paper_p100(), 1, eviction="mru")
+
+
+# ---------------------------------------------------------------------------
+# Future-aware (Belady) eviction
+# ---------------------------------------------------------------------------
+
+
+def oversubscribed_hw() -> HardwareModel:
+    return dataclasses.replace(
+        HardwareModel.paper_p100(),
+        device_capacity=4.5e6, staging_throttle=3.3e6,
+    )
+
+
+class TestBeladyEviction:
+    def test_belady_moves_fewer_bytes_than_lru(self):
+        """3-pass cyclic scan, device holds ~3/8 of the working set: LRU
+        always evicts the chunk the next pass needs soonest; the next-use
+        oracle keeps a stable resident subset instead."""
+        hw = oversubscribed_hw()
+        plan = kmeans_plan(1 << 20, 1 << 17, passes=3)
+        res = {}
+        for policy in ("lru", "belady"):
+            sim = Simulator(hw, 1, flops_per_thread=3000.0,
+                            bytes_per_thread=16.0, eviction=policy)
+            res[policy] = sim.run(plan)
+        assert res["lru"].stats["evictions"] > 0  # pressure actually exists
+        assert res["belady"].stats["h2d_bytes"] \
+            < res["lru"].stats["h2d_bytes"]
+        assert res["belady"].stats["evictions"] \
+            < res["lru"].stats["evictions"]
+        assert res["belady"].makespan <= res["lru"].makespan
+        assert res["belady"].stats["oracle_evictions"] > 0
+        assert res["lru"].stats["oracle_evictions"] == 0
+
+    def test_oracle_evicts_furthest_next_use(self):
+        from repro.core import MemoryManager
+
+        hw = dataclasses.replace(
+            HardwareModel.paper_p100(), device_capacity=3000.0
+        )
+        mm = MemoryManager(hw)
+        mm.register(("a", 0), 1000, tier=Tier.DEVICE)
+        mm.register(("b", 0), 1000, tier=Tier.DEVICE)
+        mm.register(("c", 0), 1000, tier=Tier.DEVICE)
+        # Next-use distances: b is needed furthest out; a never again.
+        mm.eviction_oracle = {("a", 0): None, ("b", 0): 50.0,
+                              ("c", 0): 5.0}.get
+        mm.register(("d", 0), 1000, tier=Tier.HOST)
+        mm.stage([("d", 0)])
+        # "never used again" (None = inf) wins over every finite distance.
+        assert mm.chunks[("a", 0)].tier is not Tier.DEVICE
+        assert mm.chunks[("b", 0)].tier is Tier.DEVICE
+        assert mm.chunks[("c", 0)].tier is Tier.DEVICE
+
+    def test_no_oracle_falls_back_to_lru(self):
+        from repro.core import MemoryManager
+
+        hw = dataclasses.replace(
+            HardwareModel.paper_p100(), device_capacity=2000.0
+        )
+        mm = MemoryManager(hw)
+        mm.register(("a", 0), 1000, tier=Tier.DEVICE)
+        mm.register(("b", 0), 1000, tier=Tier.DEVICE)
+        mm.touch(("a", 0))  # b becomes least recently used
+        mm.register(("c", 0), 1000, tier=Tier.HOST)
+        mm.stage([("c", 0)])
+        assert mm.chunks[("b", 0)].tier is not Tier.DEVICE
+        assert mm.chunks[("a", 0)].tier is Tier.DEVICE
+
+
+# ---------------------------------------------------------------------------
+# Plan caching
+# ---------------------------------------------------------------------------
+
+
+class TestPlanCache:
+    def test_hit_rate_on_training_loop(self):
+        """ISSUE 9 acceptance: ≥ 90% plan-cache hit rate when a training
+        loop re-plans the same launches every step."""
+        reg = MetricsRegistry()
+        planner = Planner(Topology(4, devices_per_node=2), registry=reg)
+        plan = ExecutionPlan(launch_name="driver")
+        arrays = kmeans_arrays(1 << 16, 1 << 13)
+        for _ in range(20):
+            planner.plan_launch("kmeans", KMEANS_ANN, (1 << 16,),
+                                BlockWork(1 << 13), arrays, plan=plan)
+        snap = reg.snapshot()
+        hits = snap["plan.cache{result=hit}"]
+        misses = snap["plan.cache{result=miss}"]
+        assert misses == 1
+        assert hits == 19
+        assert hits / (hits + misses) >= 0.9
+
+    def test_cached_plans_identical_to_native(self):
+        """Template replay must reproduce native planning exactly —
+        including cross-launch conflict edges through the shared
+        chunk-state table."""
+        stencil = parse("global i => read a[i-1:i+2], write b[i]")
+        reverse = parse("global i => read b[i-1:i+2], write a[i]")
+        arrays = {
+            "a": ArrayMeta("a", (1024,), 4, BlockDist(128)),
+            "b": ArrayMeta("b", (1024,), 4, BlockDist(128)),
+        }
+
+        def build(cache_plans: bool):
+            planner = Planner(Topology(4, devices_per_node=2),
+                              cache_plans=cache_plans)
+            plan = ExecutionPlan(launch_name="driver")
+            for _ in range(2):
+                planner.plan_launch("fwd", stencil, (1024,), EvenWork(),
+                                    arrays, plan=plan)
+                planner.plan_launch("bwd", reverse, (1024,), EvenWork(),
+                                    arrays, plan=plan)
+            return plan
+
+        native, cached = build(False), build(True)
+        assert len(native.tasks) == len(cached.tasks)
+        for tn, tc in zip(native.tasks, cached.tasks):
+            assert (tn.tid, tn.kind, tn.worker, tn.deps) == \
+                (tc.tid, tc.kind, tc.worker, tc.deps)
+            assert [r.key() for r in tn.reads] == [r.key() for r in tc.reads]
+            assert [r.key() for r in tn.writes] == \
+                [r.key() for r in tc.writes]
+            assert (tn.bytes, tn.flops, tn.label) == \
+                (tc.bytes, tc.flops, tc.label)
+
+    def test_cross_launch_dependencies_survive_caching(self):
+        """Second (cache-hit) launch must still depend on the first launch's
+        writes — replay consults the live chunk-state table."""
+        planner = Planner(Topology(2, devices_per_node=2))
+        plan = ExecutionPlan(launch_name="driver")
+        ann = parse("global i => readwrite x[i]")
+        arrays = {"x": ArrayMeta("x", (512,), 4, BlockDist(256))}
+        planner.plan_launch("step", ann, (512,), EvenWork(), arrays,
+                            plan=plan)
+        n1 = len(plan.tasks)
+        planner.plan_launch("step", ann, (512,), EvenWork(), arrays,
+                            plan=plan)
+        later = [t for t in plan.tasks if t.tid >= n1]
+        assert any(any(d < n1 for d in t.deps) for t in later)
+        plan.validate()
+
+    def test_custom_dist_is_uncacheable(self):
+        from repro.core.distributions import Chunk
+        from repro.core.ndrange import Region
+
+        def chunker(shape, nd):
+            return [Chunk(0, Region.from_shape(shape), 0)]
+
+        reg = MetricsRegistry()
+        planner = Planner(Topology(1), registry=reg)
+        ann = parse("global i => read x[i], write y[i]")
+        arrays = {
+            "x": ArrayMeta("x", (64,), 4, CustomDist(chunker)),
+            "y": ArrayMeta("y", (64,), 4, BlockDist(64)),
+        }
+        for _ in range(3):
+            lp = planner.plan_launch("k", ann, (64,), EvenWork(), arrays)
+            assert lp.plan.tasks  # planning itself still works
+        snap = reg.snapshot()
+        assert snap["plan.cache{result=uncacheable}"] == 3
+        assert snap.get("plan.cache{result=hit}", 0) == 0
+
+    def test_cache_disabled_emits_no_counters(self):
+        reg = MetricsRegistry()
+        planner = Planner(Topology(1), registry=reg, cache_plans=False)
+        arrays = kmeans_arrays(1 << 14, 1 << 12)
+        for _ in range(3):
+            planner.plan_launch("kmeans", KMEANS_ANN, (1 << 14,),
+                                BlockWork(1 << 12), arrays)
+        assert not [k for k in reg.snapshot() if k.startswith("plan.cache")]
+
+    def test_cache_capacity_is_bounded(self):
+        planner = Planner(Topology(1), cache_capacity=2)
+        for n in (1 << 12, 1 << 13, 1 << 14, 1 << 15):
+            planner.plan_launch("kmeans", KMEANS_ANN, (n,),
+                                BlockWork(1 << 11), kmeans_arrays(n, 1 << 11))
+        assert len(planner._plan_cache) == 2
+
+
+# ---------------------------------------------------------------------------
+# Satellite: utilization normalization
+# ---------------------------------------------------------------------------
+
+
+class TestUtilization:
+    def test_normalized_by_worker_count(self):
+        res = SimResult(makespan=2.0, busy={"compute": 3.0}, task_count=4,
+                        stats={}, num_workers=2)
+        assert res.utilization("compute") == pytest.approx(0.75)
+
+    def test_cannot_exceed_one_across_workers(self):
+        """Regression: busy sums across workers, so a 4-worker run that
+        keeps every device busy used to report utilization ≈ 4.0."""
+        ann = parse("global i => read inp[i], write out[i]")
+        planner = Planner(Topology(4, devices_per_node=2))
+        arrays = {
+            "inp": ArrayMeta("inp", (4096,), 4, BlockDist(1024)),
+            "out": ArrayMeta("out", (4096,), 4, BlockDist(1024)),
+        }
+        lp = planner.plan_launch("k", ann, (4096,), EvenWork(), arrays)
+        res = Simulator(HardwareModel.paper_p100(), 4,
+                        flops_per_thread=1000.0).run(lp.plan)
+        assert res.num_workers == 4
+        assert 0.0 < res.utilization("compute") <= 1.0
+
+    def test_zero_makespan_is_zero(self):
+        res = SimResult(makespan=0.0, busy={}, task_count=0, stats={})
+        assert res.utilization() == 0.0
