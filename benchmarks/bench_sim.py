@@ -1,6 +1,6 @@
 """Machine-readable simulator benchmark — the perf trajectory's data points.
 
-``collect()`` runs four seeded, deterministic simulator benchmarks and
+``collect()`` runs five seeded, deterministic simulator benchmarks and
 returns one JSON-able document (schema ``repro.bench_sim/1``):
 
 * ``fig10``      — chunk-size sweep, demand staging vs lookahead prefetching
@@ -8,7 +8,10 @@ returns one JSON-able document (schema ``repro.bench_sim/1``):
 * ``eviction``   — oversubscribed multi-pass scan, LRU vs Belady
   (future-aware) eviction;
 * ``plan_cache`` — repeated-launch training loop, plan-cache hit rate;
-* ``recovery``   — seeded chaos run (worker death), recovery counters.
+* ``recovery``   — seeded chaos run (worker death), recovery counters;
+* ``d2d``        — shared-input fan-out, host-only staging vs the
+  peer-to-peer transfer fabric (topology + multicast), plus owner vs
+  locality-aware placement comm bytes.
 
 ``python -m benchmarks.bench_sim --out BENCH_sim.json [--full]`` writes the
 document; ``benchmarks/compare_bench.py`` validates a fresh run against the
@@ -28,15 +31,17 @@ from repro.core import (
     BlockWork,
     FaultInjector,
     HardwareModel,
+    Interconnect,
     Planner,
     RecoveryPolicy,
     ReplicatedDist,
+    RowDist,
     Simulator,
     Topology,
     kill_worker,
     parse,
 )
-from repro.core.plan_ir import ExecutionPlan
+from repro.core.plan_ir import ChunkRef, ExecutionPlan, TaskKind
 from repro.obs.metrics import MetricsRegistry
 
 from .paper_fig10_chunksize import KMEANS_ANN, run_one
@@ -171,6 +176,74 @@ def recovery_section() -> dict:
     return out
 
 
+def _shared_input_plan(num_workers: int = 4, num_blocks: int = 4,
+                       nbytes: int = 1 << 20, flops: int = 10 ** 9
+                       ) -> ExecutionPlan:
+    """Shared-input fan-out: every worker reads the same ``num_blocks``
+    table chunks (plus a private chunk per task).  Worker ``j`` first runs
+    ``j + 1`` private warm-up tasks, staggering when each worker reaches
+    the shared reads — so the first reader host-stages a table block and
+    the fabric (d2d + multicast) can serve the other three from device."""
+    plan = ExecutionPlan(launch_name="shared_table")
+    for w in range(num_workers):
+        prev: list[int] = []
+        for i in range(w + 1):
+            t = plan.add(TaskKind.EXECUTE, w, deps=prev,
+                         reads=[ChunkRef("priv", w * 16 + i)],
+                         bytes=nbytes, flops=flops, label=f"warm{w}.{i}")
+            prev = [t.tid]
+        for b in range(num_blocks):
+            t = plan.add(TaskKind.EXECUTE, w, deps=prev,
+                         reads=[ChunkRef("table", b),
+                                ChunkRef("priv", w * 16 + 8 + b)],
+                         bytes=nbytes, flops=flops, label=f"use{w}.{b}")
+            prev = [t.tid]
+    return plan
+
+
+def d2d_section() -> dict:
+    """Peer-to-peer transfer fabric vs host-only staging on the shared-input
+    fan-out, plus owner vs locality-aware placement comm bytes (ISSUE 10
+    acceptance: d2d must move strictly fewer host-staged bytes at
+    equal-or-better makespan; locality placement must not plan more
+    communication than owner placement)."""
+    hw_host = HardwareModel.paper_p100()
+    hw_d2d = dataclasses.replace(
+        hw_host, topology=Interconnect(workers_per_node=2))
+    out: dict = {}
+    for name, hw in (("host_only", hw_host), ("d2d", hw_d2d)):
+        sim = Simulator(hw, 4, flops_per_thread=1.0)
+        res = sim.run(_shared_input_plan())
+        out[name] = {
+            "makespan_s": res.makespan,
+            "h2d_bytes": res.stats.get("h2d_bytes", 0),
+            "d2d_bytes": res.stats.get("d2d_bytes", 0),
+            "d2d_transfers": res.stats.get("d2d_transfers", 0),
+            "multicast_fanout": res.stats.get("multicast_fanout", 0),
+        }
+
+    # Placement: data in 4 contiguous quarters (owners 0-3), work split into
+    # 8 superblocks assigned round-robin — every odd superblock lands off
+    # the worker holding its input.  Locality placement re-homes those four.
+    n, nw = 1 << 16, 4
+    ann = parse("global i => read inp[i], write out[i]")
+    arrays = {
+        "inp": ArrayMeta("inp", (n,), 4, RowDist(num_chunks=nw)),
+        "out": ArrayMeta("out", (n,), 4, RowDist(num_chunks=nw)),
+    }
+    placement: dict = {}
+    for mode in ("owner", "locality"):
+        reg = MetricsRegistry()
+        planner = Planner(Topology(nw, devices_per_node=2), registry=reg,
+                          placement=mode)
+        lp = planner.plan_launch("axpy", ann, (n,), BlockWork(n // 8), arrays)
+        placement[f"{mode}_comm_bytes"] = lp.total_comm_bytes()
+    placement["affinity_hits"] = reg.snapshot().get(
+        "place.affinity_hits", 0.0)
+    out["placement"] = placement
+    return out
+
+
 def collect(full: bool = False) -> dict:
     return {
         "schema": SCHEMA,
@@ -183,6 +256,7 @@ def collect(full: bool = False) -> dict:
         "eviction": eviction_section(),
         "plan_cache": plan_cache_section(),
         "recovery": recovery_section(),
+        "d2d": d2d_section(),
     }
 
 
@@ -212,6 +286,12 @@ def main(argv: list[str] | None = None) -> None:
     ev = doc["eviction"]
     print(f"  eviction h2d: lru {ev['lru']['h2d_bytes'] / 1e6:.1f} MB, "
           f"belady {ev['belady']['h2d_bytes'] / 1e6:.1f} MB")
+    dd = doc["d2d"]
+    print(f"  d2d fabric: h2d {dd['host_only']['h2d_bytes'] / 1e6:.1f} -> "
+          f"{dd['d2d']['h2d_bytes'] / 1e6:.1f} MB, makespan "
+          f"{dd['host_only']['makespan_s']:.6f} -> "
+          f"{dd['d2d']['makespan_s']:.6f} s "
+          f"({dd['d2d']['d2d_transfers']:.0f} p2p transfers)")
 
 
 if __name__ == "__main__":

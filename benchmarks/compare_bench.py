@@ -4,11 +4,22 @@ Two layers of checking:
 
 * **schema + invariants** on the new document alone — prefetching must beat
   demand staging at every chunk size (makespan ≤ baseline, overlap strictly
-  higher), the plan-cache hit rate must stay ≥ 0.9, and Belady must not move
-  more h2d bytes than LRU;
+  higher), the plan-cache hit rate must stay ≥ 0.9, Belady must not move
+  more h2d bytes than LRU, and the d2d transfer fabric must move strictly
+  fewer host-staged bytes than host-only staging at equal-or-better
+  makespan (with locality placement planning no more comm than owner
+  placement);
 * **regression vs the checked-in baseline** — makespan may not regress more
   than ``MAKESPAN_TOLERANCE`` (20%) and the prefetch overlap fraction may
   not drop by more than ``OVERLAP_TOLERANCE`` at any chunk size.
+
+The schema check is **spec-driven and additive**: each section declares the
+fields it requires, missing ones fail, and any *extra* keys a newer
+bench_sim emits are ignored — so an older baseline keeps validating when
+the document grows new metrics, while a truncated document still fails.
+Sections listed as optional (``d2d``) are validated only when present;
+invariants on them run against the *new* document, which always carries
+them.
 
 Usage: ``python -m benchmarks.compare_bench OLD.json NEW.json``; exits
 non-zero with one line per violation.
@@ -24,9 +35,39 @@ MAKESPAN_TOLERANCE = 1.20  # fail if new makespan > old * this
 OVERLAP_TOLERANCE = 1e-9  # fail if new overlap < old - this
 MIN_CACHE_HIT_RATE = 0.9
 
+#: Required numeric fields per document path.  ``validate`` walks this spec;
+#: keys present in the document but absent here are deliberately ignored
+#: (additive-schema tolerance), keys listed here but missing fail.
+_NUMBER_FIELDS: dict[str, tuple[str, ...]] = {
+    "eviction.lru": ("makespan_s", "h2d_bytes"),
+    "eviction.belady": ("makespan_s", "h2d_bytes"),
+    "plan_cache": ("hits", "misses", "hit_rate"),
+    "recovery": ("worker_deaths", "lineage_replays", "makespan_s"),
+    "d2d.host_only": ("makespan_s", "h2d_bytes"),
+    "d2d.d2d": ("makespan_s", "h2d_bytes", "d2d_bytes", "d2d_transfers"),
+    "d2d.placement": ("owner_comm_bytes", "locality_comm_bytes",
+                      "affinity_hits"),
+}
+
+#: Sections a document may omit without failing validation (added after the
+#: schema's first baselines were checked in; invariants still require them
+#: on freshly emitted documents).
+_OPTIONAL_SECTIONS = ("d2d",)
+
+
+def _dig(doc: dict, path: str):
+    node = doc
+    for part in path.split("."):
+        if not isinstance(node, dict):
+            return None
+        node = node.get(part)
+    return node
+
 
 def validate(doc: dict) -> list[str]:
-    """Schema check; returns a list of problems (empty = valid)."""
+    """Spec-driven schema check; returns a list of problems (empty =
+    valid).  Extra keys anywhere are tolerated; missing required fields
+    are not."""
     errs = []
     if doc.get("schema") != SCHEMA:
         errs.append(f"schema: expected {SCHEMA!r}, got {doc.get('schema')!r}")
@@ -49,22 +90,23 @@ def validate(doc: dict) -> list[str]:
                     errs.append(f"fig10[{i}].{variant}.{field}: not a number")
         if not isinstance(row.get("chunk_bytes"), (int, float)):
             errs.append(f"fig10[{i}].chunk_bytes: not a number")
-    for policy in ("lru", "belady"):
-        if not isinstance(doc.get("eviction", {}).get(policy), dict):
-            errs.append(f"eviction.{policy}: missing")
-    pc = doc.get("plan_cache", {})
-    for field in ("hits", "misses", "hit_rate"):
-        if not isinstance(pc.get(field), (int, float)):
-            errs.append(f"plan_cache.{field}: not a number")
-    rec = doc.get("recovery", {})
-    for field in ("worker_deaths", "lineage_replays", "makespan_s"):
-        if not isinstance(rec.get(field), (int, float)):
-            errs.append(f"recovery.{field}: not a number")
+    for path, fields in _NUMBER_FIELDS.items():
+        top = path.split(".", 1)[0]
+        if top in _OPTIONAL_SECTIONS and top not in doc:
+            continue  # newer additive section an older document predates
+        node = _dig(doc, path)
+        if not isinstance(node, dict):
+            errs.append(f"{path}: missing")
+            continue
+        for field in fields:
+            if not isinstance(node.get(field), (int, float)):
+                errs.append(f"{path}.{field}: not a number")
     return errs
 
 
 def check_invariants(doc: dict) -> list[str]:
-    """Perf claims the document itself must satisfy (ISSUE 9 acceptance)."""
+    """Perf claims the document itself must satisfy (ISSUE 9 + ISSUE 10
+    acceptance)."""
     errs = []
     for row in doc["fig10"]:
         cb = row["chunk_bytes"]
@@ -89,11 +131,43 @@ def check_invariants(doc: dict) -> list[str]:
         errs.append("eviction: belady moved more h2d bytes than lru")
     if doc["recovery"]["worker_deaths"] < 1:
         errs.append("recovery: chaos run recorded no worker death")
+    # d2d transfer fabric gates (ISSUE 10): the fabric must strictly cut
+    # host-staged bytes without hurting makespan, actually ride the p2p
+    # link, and locality placement must not plan more communication than
+    # the default owner placement.
+    dd = doc.get("d2d")
+    if dd is None:
+        errs.append("d2d: section missing from freshly emitted document")
+        return errs
+    host, fab = dd["host_only"], dd["d2d"]
+    if fab["h2d_bytes"] >= host["h2d_bytes"]:
+        errs.append(
+            f"d2d: fabric h2d bytes {fab['h2d_bytes']:.0f} not strictly "
+            f"below host-only {host['h2d_bytes']:.0f}"
+        )
+    if fab["makespan_s"] > host["makespan_s"]:
+        errs.append(
+            f"d2d: fabric makespan {fab['makespan_s']:.6g} > host-only "
+            f"{host['makespan_s']:.6g}"
+        )
+    if fab["d2d_transfers"] < 1:
+        errs.append("d2d: no peer-to-peer transfer was issued")
+    pl = dd["placement"]
+    if pl["locality_comm_bytes"] > pl["owner_comm_bytes"]:
+        errs.append(
+            f"d2d placement: locality comm bytes "
+            f"{pl['locality_comm_bytes']:.0f} > owner "
+            f"{pl['owner_comm_bytes']:.0f}"
+        )
+    if pl["affinity_hits"] < 1:
+        errs.append("d2d placement: locality mode re-homed no superblock")
     return errs
 
 
 def compare(old: dict, new: dict) -> list[str]:
-    """Regression check of ``new`` against the checked-in ``old``."""
+    """Regression check of ``new`` against the checked-in ``old``.
+    Sections the old baseline predates are skipped — additive schema
+    growth is not a regression."""
     errs = []
     old_rows = {r["chunk_bytes"]: r for r in old["fig10"]}
     for row in new["fig10"]:
@@ -121,6 +195,19 @@ def compare(old: dict, new: dict) -> list[str]:
             f"{old['plan_cache']['hit_rate']:.3f} -> "
             f"{new['plan_cache']['hit_rate']:.3f}"
         )
+    old_dd, new_dd = old.get("d2d"), new.get("d2d")
+    if old_dd is not None and new_dd is not None:
+        o, n = old_dd["d2d"], new_dd["d2d"]
+        if n["makespan_s"] > o["makespan_s"] * MAKESPAN_TOLERANCE:
+            errs.append(
+                f"d2d: fabric makespan regressed {o['makespan_s']:.6g} -> "
+                f"{n['makespan_s']:.6g} (> {MAKESPAN_TOLERANCE:.0%})"
+            )
+        if n["h2d_bytes"] > o["h2d_bytes"]:
+            errs.append(
+                f"d2d: fabric host-staged bytes regressed "
+                f"{o['h2d_bytes']:.0f} -> {n['h2d_bytes']:.0f}"
+            )
     return errs
 
 

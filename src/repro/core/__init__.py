@@ -40,7 +40,13 @@ from .distributions import (
     TileDist,
 )
 from .launch import Context, KernelDef, SuperblockInfo
-from .memory import HardwareModel, MemoryManager, OutOfMemory, Tier
+from .memory import (
+    HardwareModel,
+    Interconnect,
+    MemoryManager,
+    OutOfMemory,
+    Tier,
+)
 from .ndrange import Affine, Region
 from .plan_ir import ArgPlan, CommPattern, ExecutionPlan, LaunchPlan, TaskKind
 from .planner import ArrayMeta, Planner, Topology
@@ -52,7 +58,7 @@ __all__ = [
     "BlockDist", "BlockWork", "Chunk", "ColDist", "CommPattern", "Context",
     "CustomDist", "DistributedArray", "Distribution", "EvenWork",
     "ExecutionPlan", "FaultInjector", "FaultSpec", "HardwareModel",
-    "InjectedFault", "KernelDef", "LaunchPlan", "make_array",
+    "InjectedFault", "Interconnect", "KernelDef", "LaunchPlan", "make_array",
     "MemoryManager", "MeshWork", "OutOfMemory", "parse", "Planner",
     "RecoveryPolicy", "Region", "ReplicatedDist", "RowDist", "SimResult",
     "Simulator", "StencilDist", "Superblock", "SuperblockInfo", "TaskKind",

@@ -43,8 +43,62 @@ class Tier(enum.IntEnum):
 MEM_STAT_KEYS = (
     "h2d_bytes", "d2h_bytes", "host2disk_bytes", "disk2host_bytes",
     "evictions", "pool_misses", "oom_demotions", "oracle_evictions",
-    "prefetch_bytes",
+    "prefetch_bytes", "d2d_in_bytes", "peer_evictions",
 )
+
+
+@dataclasses.dataclass(frozen=True)
+class Interconnect:
+    """Device-to-device interconnect topology (paper §3.1: nodes of GPUs
+    linked by PCIe/NVLink internally and InfiniBand across nodes).
+
+    Workers are grouped into nodes by contiguous id
+    (``node(w) = w // workers_per_node``); a same-node link is faster and
+    lower-latency than a cross-node one.  Installing an ``Interconnect`` on
+    :class:`HardwareModel.topology` enables the scheduler's peer-to-peer
+    ``d2d`` staging path; with ``topology=None`` (the default) every
+    cross-worker chunk moves through the host exactly as before."""
+
+    workers_per_node: int = 4
+    same_node_bw: float = 13e9  # P2P over PCIe within a node (bytes/s)
+    cross_node_bw: float = 5e9  # GPUDirect RDMA over the fabric (bytes/s)
+    same_node_latency: float = 5e-6  # seconds per transfer
+    cross_node_latency: float = 20e-6
+
+    def node(self, worker: int) -> int:
+        return worker // self.workers_per_node
+
+    def same_node(self, a: int, b: int) -> bool:
+        return self.node(a) == self.node(b)
+
+    def link(self, src: int, dst: int) -> tuple[float, float]:
+        """(bandwidth bytes/s, latency s) of the src→dst link."""
+        if self.same_node(src, dst):
+            return self.same_node_bw, self.same_node_latency
+        return self.cross_node_bw, self.cross_node_latency
+
+    def transfer_time(self, nbytes: float, src: int, dst: int) -> float:
+        bw, lat = self.link(src, dst)
+        return lat + nbytes / bw
+
+    def cheapest_source(self, dst: int, candidates: "list[int]",
+                        nbytes: float = 1 << 20) -> int:
+        """The candidate with the cheapest link into ``dst`` (ties break
+        toward the lowest worker id, so routing is deterministic)."""
+        return min(candidates,
+                   key=lambda c: (self.transfer_time(nbytes, c, dst), c))
+
+    @staticmethod
+    def paper_cluster() -> "Interconnect":
+        """The paper's evaluation cluster: 4 nodes × 4 P100s, P2P over
+        PCIe 3.0 inside a node, InfiniBand FDR between nodes."""
+        return Interconnect(
+            workers_per_node=4,
+            same_node_bw=13e9,
+            cross_node_bw=7e9,  # IB FDR, matches HardwareModel.net_bw
+            same_node_latency=5e-6,
+            cross_node_latency=20e-6,
+        )
 
 
 @dataclasses.dataclass
@@ -64,6 +118,9 @@ class HardwareModel:
     task_overhead: float = 50e-6  # scheduler+launch overhead per task
     alloc_cost: float = 200e-6  # pool-miss allocation
     staging_throttle: float = 2e9  # max bytes staged in flight (paper: 2 GB)
+    # Peer-to-peer interconnect; None keeps every cross-worker transfer on
+    # the host path (byte-identical to the pre-d2d scheduler).
+    topology: "Interconnect | None" = None
 
     @staticmethod
     def paper_p100() -> "HardwareModel":
@@ -77,6 +134,13 @@ class HardwareModel:
             disk_capacity=3e12,
             net_bw=7e9,  # InfiniBand FDR
             ici_bw=16e9,  # P2P over PCIe
+        )
+
+    @staticmethod
+    def paper_cluster() -> "HardwareModel":
+        """The paper's full platform: P100 nodes plus the d2d fabric."""
+        return dataclasses.replace(
+            HardwareModel.paper_p100(), topology=Interconnect.paper_cluster()
         )
 
 
@@ -128,6 +192,12 @@ class MemoryManager:
         # from the ExecutionPlan task order; without one, eviction falls
         # back to pure LRU.
         self.eviction_oracle = None
+        # Optional peer-residency predicate (installed by the scheduler when
+        # a d2d topology is configured): ``peer_resident(key) -> bool`` says
+        # a live peer worker holds this chunk in DEVICE memory, which makes
+        # it a cheap eviction victim — it can come back over the fast d2d
+        # link instead of the host link.
+        self.peer_resident = None
         wl = {"worker": str(worker if worker is not None else 0)}
         self._stat = {
             k: self.registry.counter(f"mem.{k}").labels(**wl)
@@ -243,6 +313,29 @@ class MemoryManager:
         self._stat["prefetch_bytes"].inc(info.size)
         return cost
 
+    def receive_d2d(self, key: tuple[str, int],
+                    evict: bool = True) -> float | None:
+        """Place a chunk in DEVICE memory as the target of a peer-to-peer
+        transfer: no host-link cost is charged (the scheduler models the
+        link time on the ``d2d`` stream).  With ``evict=True`` (demand
+        staging) resident chunks may spill to make room and the modeled
+        spill seconds are returned; with ``evict=False`` (multicast /
+        prefetch push) only free capacity is used.  Returns ``None`` when
+        the chunk is unknown, already resident, or — under ``evict=False``
+        — does not fit."""
+        info = self.chunks.get(key)
+        if info is None or info.tier is Tier.DEVICE:
+            return None
+        if not evict and (self.used[Tier.DEVICE] + info.size
+                          > self.capacity[Tier.DEVICE]):
+            return None
+        cost = self._make_room(Tier.DEVICE, info.size) if evict else 0.0
+        self._account_remove(info)
+        self._account_add(info, Tier.DEVICE)
+        self.touch(key)
+        self._stat["d2d_in_bytes"].inc(info.size)
+        return cost
+
     # -- migration ---------------------------------------------------------------
 
     def _promote(self, info: ChunkInfo) -> float:
@@ -262,28 +355,44 @@ class MemoryManager:
             self._account_add(info, Tier.DEVICE)
         return cost
 
-    def _victim_key(self, tier: Tier) -> tuple[str, int] | None:
-        """Pick the eviction victim for ``tier``: with no oracle, the
-        least-recently-used unpinned chunk; with a next-use oracle, the
-        unpinned chunk whose next use is furthest in the future (Belady),
-        breaking ties toward LRU order."""
+    def _pick(self, candidates: list) -> tuple[str, int] | None:
+        """Apply the eviction policy to an ordered candidate list: LRU front
+        with no oracle, otherwise the candidate whose next use is furthest
+        in the future (Belady), breaking ties toward LRU order (the list is
+        iterated front = least recently used, so ties keep the older one)."""
         oracle = self.eviction_oracle
         if oracle is None:
-            return next(
-                (k for k in self.lru[tier] if self.chunks[k].pinned == 0),
-                None,
-            )
+            return candidates[0] if candidates else None
         best_key, best_dist = None, -1.0
-        for k in self.lru[tier]:  # front = LRU, so ties keep the older one
-            if self.chunks[k].pinned:
-                continue
+        for k in candidates:
             d = oracle(k)
             d = float("inf") if d is None else float(d)
             if d > best_dist:
                 best_key, best_dist = k, d
-        if best_key is not None:
-            self._stat["oracle_evictions"].inc()
         return best_key
+
+    def _victim_key(self, tier: Tier) -> tuple[str, int] | None:
+        """Pick the eviction victim for ``tier``.  When the scheduler has
+        installed a ``peer_resident`` predicate (d2d topology configured),
+        DEVICE chunks that a live peer also holds on-device are preferred
+        victims: losing one is cheap because it can come back over the d2d
+        link instead of the host link.  Within either pool the policy is
+        LRU, or Belady next-use distance when an oracle is installed."""
+        unpinned = [k for k in self.lru[tier]
+                    if self.chunks[k].pinned == 0]
+        peer = self.peer_resident if tier is Tier.DEVICE else None
+        if peer is not None:
+            replicated = [k for k in unpinned if peer(k)]
+            victim = self._pick(replicated)
+            if victim is not None:
+                self._stat["peer_evictions"].inc()
+                if self.eviction_oracle is not None:
+                    self._stat["oracle_evictions"].inc()
+                return victim
+        victim = self._pick(unpinned)
+        if victim is not None and self.eviction_oracle is not None:
+            self._stat["oracle_evictions"].inc()
+        return victim
 
     def _make_room(self, tier: Tier, size: int) -> float:
         cost = 0.0

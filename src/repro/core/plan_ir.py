@@ -174,6 +174,16 @@ class ExecutionPlan:
         return [t.tid for t in self.tasks
                 if any(ref.key() == key for ref in t.reads)]
 
+    def reads_index(self) -> dict[tuple[str, int], list[int]]:
+        """Chunk key → reader task ids, in plan order — the whole-plan view
+        ``readers_of`` gives one key at a time.  The scheduler's multicast
+        stager uses it to find every worker that will consume a chunk."""
+        idx: dict[tuple[str, int], list[int]] = {}
+        for t in self.tasks:
+            for ref in t.reads:
+                idx.setdefault(ref.key(), []).append(t.tid)
+        return idx
+
 
 # ---------------------------------------------------------------------------
 # Communication patterns recognized by the JAX lowering

@@ -74,7 +74,18 @@ RECOVERY_STAT_KEYS = (
 #: present, zero when prefetching is off).
 PREFETCH_STAT_KEYS = (
     "prefetch_issued", "prefetch_bytes", "prefetch_hits", "prefetch_wasted",
+    "prefetch_skipped",
 )
+
+#: How many upcoming tasks the prefetcher may scan past producer-blocked
+#: entries per round, as a multiple of the window (bounds per-call cost of
+#: the skip-and-continue scan across superblock boundaries).
+_PF_SCAN_FACTOR = 8
+
+#: ``SimResult.stats`` keys the d2d transfer fabric maintains (always
+#: present, zero with no topology configured).  They mirror the registry
+#: counters ``d2d.bytes``, ``d2d.transfers``, and ``multicast.fanout``.
+D2D_STAT_KEYS = ("d2d_bytes", "d2d_transfers", "multicast_fanout")
 
 #: Scheduler-owned registry counters (``sim.<key>``).
 _SIM_STAT_KEYS = ("stage_wait",) + PREFETCH_STAT_KEYS + RECOVERY_STAT_KEYS
@@ -114,9 +125,11 @@ _TRANSFER_KINDS = (TaskKind.COPY, TaskKind.SEND, TaskKind.RECV,
                    TaskKind.SYNC_REPLICAS)
 
 #: Trace category per executor stream (the overlap analyzer's grouping).
+#: ``d2d`` is the peer-to-peer staging stream added with the transfer
+#: fabric — its spans count as transfers like h2d/copy/net.
 _CAT_FOR_RESOURCE = {
     "compute": "compute", "h2d": "transfer", "copy": "transfer",
-    "net": "transfer",
+    "net": "transfer", "d2d": "transfer",
 }
 
 
@@ -139,10 +152,18 @@ class Simulator:
         registry: MetricsRegistry | None = None,
         prefetch_window: int = 0,
         eviction: str = "lru",
+        multicast: bool = True,
     ):
         if eviction not in ("lru", "belady"):
             raise ValueError(f"unknown eviction policy {eviction!r}")
         self.hw = hw
+        # d2d transfer fabric: with ``hw.topology`` set, a chunk that is
+        # DEVICE-resident on a peer worker stages peer-to-peer over the
+        # cheapest link (its own ``d2d`` stream) instead of from HOST, and
+        # ``multicast`` (on by default, only active with a topology) chains
+        # a freshly host-staged chunk to every other worker that will
+        # consume it.  With ``hw.topology=None`` nothing changes.
+        self.multicast = bool(multicast)
         # Overlap engine (paper §3.3): with ``prefetch_window`` > 0 each
         # worker looks that many upcoming tasks ahead and issues their
         # chunk transfers on the h2d stream while compute runs, bounded by
@@ -284,6 +305,110 @@ class Simulator:
         else:
             for m in self.memory:
                 m.eviction_oracle = None
+
+        # d2d transfer fabric: with a topology on the hardware model, every
+        # worker gets a ``d2d`` executor stream and chunks that are DEVICE-
+        # resident on a live peer stage peer-to-peer over the cheapest link
+        # instead of from HOST.  ``mcast_marks`` tracks in-flight multicast
+        # pushes (chunk already accounted DEVICE on the receiver, consumer
+        # must wait for the modeled arrival).  Without a topology all of
+        # this is inert and the schedule stays byte-identical.
+        topo = getattr(self.hw, "topology", None)
+        d2d_on = topo is not None and self.num_workers > 1
+        mcast_on = d2d_on and self.multicast
+        mcast_marks: list[dict[tuple[str, int], float]] = [
+            {} for _ in range(self.num_workers)
+        ]
+        readers_by_key = plan.reads_index() if mcast_on else {}
+        if d2d_on:
+            d2d_bytes_c = reg.counter("d2d.bytes")
+            d2d_transfers_c = reg.counter("d2d.transfers")
+            mcast_fanout_c = reg.counter("multicast.fanout")
+
+            def _peer_fn(me: int):
+                def peer_resident(key: tuple[str, int]) -> bool:
+                    for v in range(self.num_workers):
+                        if v == me or v in dead:
+                            continue
+                        c = self.memory[v].chunks.get(key)
+                        if c is not None and c.tier is Tier.DEVICE:
+                            return True
+                    return False
+                return peer_resident
+
+            for wi, m in enumerate(self.memory):
+                m.peer_resident = _peer_fn(wi)
+        else:
+            for m in self.memory:
+                m.peer_resident = None
+
+        def d2d_sources(w: int, keys) -> dict[tuple[str, int], int]:
+            """For each non-resident chunk, the cheapest live peer holding
+            it on DEVICE (deterministic: ties break to the lowest id)."""
+            out: dict[tuple[str, int], int] = {}
+            mm = self.memory[w]
+            for k in dict.fromkeys(keys):
+                info = mm.chunks.get(k)
+                if info is None or info.tier is Tier.DEVICE:
+                    continue
+                cands = [v for v in range(self.num_workers)
+                         if v != w and v not in dead
+                         and (c := self.memory[v].chunks.get(k)) is not None
+                         and c.tier is Tier.DEVICE]
+                if cands:
+                    out[k] = topo.cheapest_source(w, cands, info.size)
+            return out
+
+        def maybe_multicast(w: int, keys, tiers_before, fetch,
+                            avail: float) -> None:
+            """Chain-stage each chunk this task freshly host-staged to every
+            other live worker that will read it (multicast over the
+            topology): k consumers pay one host staging plus k-1 d2d hops
+            instead of k independent host stagings.  Receivers are ordered
+            same-node first so the chain rides the fast links; pushes use
+            only free device capacity and never evict — a receiver that
+            can't fit the chunk is skipped and the demand d2d path picks it
+            up later."""
+            for k in dict.fromkeys(keys):
+                if tiers_before.get(k) is Tier.DEVICE or k in fetch:
+                    continue  # was already resident, or arrived over d2d
+                size = self.memory[w].chunks[k].size
+                tgts: list[int] = []
+                for tid2 in readers_by_key.get(k, ()):
+                    if tid2 in finished or tid2 in inflight_on:
+                        continue
+                    ww = eff(tasks[tid2])
+                    if ww == w or ww in dead or ww in tgts:
+                        continue
+                    info2 = self.memory[ww].chunks.get(k)
+                    if (info2 is None or info2.tier is Tier.DEVICE
+                            or k in mcast_marks[ww]):
+                        continue
+                    tgts.append(ww)
+                if not tgts:
+                    continue
+                tgts.sort(key=lambda ww: (not topo.same_node(w, ww), ww))
+                src, tdone, placed = w, avail, 0
+                for dst in tgts:
+                    if self.memory[dst].receive_d2d(k, evict=False) is None:
+                        continue  # no free capacity on the receiver
+                    dur = topo.transfer_time(size, src, dst)
+                    start = max(tdone, res_free.get((dst, "d2d"), 0.0))
+                    res_free[(dst, "d2d")] = start + dur
+                    busy["d2d"] = busy.get("d2d", 0.0) + dur
+                    mcast_marks[dst][k] = start + dur
+                    d2d_bytes_c.inc(size)
+                    d2d_transfers_c.inc()
+                    placed += 1
+                    if trace_on:
+                        tracer.complete(
+                            f"multicast:{k[0]}", start, dur, worker=dst,
+                            stream="d2d", cat="transfer",
+                            args={"src": src, "bytes": size},
+                        )
+                    src, tdone = dst, start + dur
+                if placed:
+                    mcast_fanout_c.inc(placed)
 
         # Lookahead prefetcher state: per-worker map of prefetched chunk
         # key -> modeled transfer-completion time, plus in-flight prefetch
@@ -442,6 +567,13 @@ class Simulator:
                     prefetched[ww].clear()
                     prefetch_bytes[ww] = 0.0
                 rebuild_pf_lists()
+            if d2d_on:
+                # In-flight multicast arrival times may reference the dead
+                # worker as a chain hop; drop every mark (chunks already
+                # placed simply become zero-wait residents, and the dead
+                # worker is excluded as a source from here on).
+                for ww in range(self.num_workers):
+                    mcast_marks[ww].clear()
             release_throttled(w)
 
         for t in tasks:
@@ -464,31 +596,38 @@ class Simulator:
                 push(now, "ready", p)
 
         def upcoming(w: int):
-            """The next ``prefetch_window`` tasks homed on ``w`` (in plan
-            order) that are neither finished nor already staged/running."""
+            """Upcoming tasks homed on ``w`` in plan order — everything not
+            finished and not already staged/running.  Window accounting
+            (and skip-and-continue over producer-blocked tasks) lives in
+            ``maybe_prefetch``."""
             lst = pf_lists[w]
             i = pf_ptr[w]
             while i < len(lst) and lst[i] in finished:
                 i += 1  # skip (and permanently drop) the finished prefix
             pf_ptr[w] = i
-            count = 0
-            while i < len(lst) and count < self.prefetch_window:
+            while i < len(lst):
                 tid2 = lst[i]
                 if tid2 not in finished and tid2 not in inflight_on:
                     yield tasks[tid2]
-                    count += 1
                 i += 1
 
         def maybe_prefetch(w: int) -> None:
-            """Issue h2d transfers for upcoming tasks' dependency-satisfied
-            chunks while compute runs.  Three bounds keep lookahead from
-            hurting: the staging throttle (prefetch depth trades against
-            contention, paper §3.3), free device capacity (a prefetch never
-            evicts resident data), and — critically — the prefetcher only
-            *backfills an idle h2d stream*: if the queue has pending work,
+            """Issue transfers for upcoming tasks' dependency-satisfied
+            chunks while compute runs — over the d2d stream when a live
+            peer already holds the chunk on-device, the h2d stream
+            otherwise.  Three bounds keep lookahead from hurting: the
+            staging throttle (prefetch depth trades against contention,
+            paper §3.3), free device capacity (a prefetch never evicts
+            resident data), and — critically — the prefetcher only
+            *backfills an idle stream*: if the queue has pending work,
             issuing ahead of it would delay demand traffic, so we wait for
             the next trigger instead.  One transfer per idle gap gives
-            classic double-buffering without unbounded queue build-up."""
+            classic double-buffering without unbounded queue build-up.
+
+            A task whose every missing chunk still awaits its producer does
+            not consume a window slot: the scan skips it (counted under
+            ``prefetch_skipped``) and keeps looking across superblock
+            boundaries, up to ``_PF_SCAN_FACTOR ×`` the window."""
             if not pf_on or w in dead:
                 return
             h2d_key = (w, "h2d")
@@ -496,10 +635,16 @@ class Simulator:
             budget = (self.hw.staging_throttle - staged_bytes[w]
                       - prefetch_bytes[w])
             lead_cap = pf_lead_cap
+            window = self.prefetch_window
+            scan_cap = window * _PF_SCAN_FACTOR
+            counted = scanned = 0
             for t2 in upcoming(w):
+                if counted >= window or scanned >= scan_cap:
+                    return
+                scanned += 1
+                nrefs = blocked = 0
                 for ref in list(t2.reads) + list(t2.writes):
-                    if res_free.get(h2d_key, 0.0) > now + lead_cap:
-                        return  # stream busy: never queue far ahead of demand
+                    nrefs += 1
                     key = ref.key()
                     if key in prefetched[w]:
                         continue
@@ -509,26 +654,52 @@ class Simulator:
                     prods = producers.get(key)
                     if prods and any(p != t2.tid and p not in finished
                                      for p in prods):
+                        blocked += 1
                         continue  # producer pending: data does not exist yet
+                    src = None
+                    if d2d_on:
+                        cands = [v for v in range(self.num_workers)
+                                 if v != w and v not in dead
+                                 and (c := self.memory[v].chunks.get(key))
+                                 is not None and c.tier is Tier.DEVICE]
+                        if cands:
+                            src = topo.cheapest_source(w, cands, info.size)
+                    stream_key = (w, "d2d") if src is not None else h2d_key
+                    if res_free.get(stream_key, 0.0) > now + lead_cap:
+                        return  # stream busy: never queue far ahead of demand
                     if info.size > budget:
                         return  # throttle-bound: stop this round
-                    cost = mm.prefetch_one(key)
-                    if cost is None:
-                        return  # no free device capacity left
+                    if src is not None:
+                        if mm.receive_d2d(key, evict=False) is None:
+                            return  # no free device capacity left
+                        cost = topo.transfer_time(info.size, src, w)
+                        d2d_bytes_c.inc(info.size)
+                        d2d_transfers_c.inc()
+                    else:
+                        cost = mm.prefetch_one(key)
+                        if cost is None:
+                            return  # no free device capacity left
                     budget -= info.size
                     prefetch_bytes[w] += info.size
-                    start = max(now, res_free.get(h2d_key, 0.0))
-                    res_free[h2d_key] = start + cost
-                    busy["h2d"] = busy.get("h2d", 0.0) + cost
+                    start = max(now, res_free.get(stream_key, 0.0))
+                    res_free[stream_key] = start + cost
+                    busy[stream_key[1]] = busy.get(stream_key[1], 0.0) + cost
                     prefetched[w][key] = start + cost
                     sim_c["prefetch_issued"].inc()
                     sim_c["prefetch_bytes"].inc(info.size)
                     if trace_on and cost > 0.0:
+                        pf_args = {"tid": t2.tid, "bytes": info.size}
+                        if src is not None:
+                            pf_args["src"] = src
                         tracer.complete(
                             f"prefetch:{key[0]}", start, cost, worker=w,
-                            stream="h2d", cat="transfer",
-                            args={"tid": t2.tid, "bytes": info.size},
+                            stream=stream_key[1], cat="transfer",
+                            args=pf_args,
                         )
+                if nrefs and blocked == nrefs:
+                    sim_c["prefetch_skipped"].inc()
+                    continue  # fully producer-blocked: free the window slot
+                counted += 1
 
         # Memory managers stamp their spill/evict/OOM instants with the
         # current simulated time (closure over this loop's ``now``).
@@ -575,12 +746,35 @@ class Simulator:
                     throttled[w].append(tid)
                     throttled_since.setdefault(tid, now)
                     continue
-                # Stage chunks (h2d resource serializes transfers).
+                # Stage chunks (h2d resource serializes transfers).  With a
+                # topology, chunks DEVICE-resident on a live peer arrive
+                # over the d2d stream instead (placed before ``stage`` so
+                # the host path never re-pays them); chunks pushed here by
+                # an in-flight multicast contribute their arrival time.
                 pre_resident = {
                     k for k in consumed
                     if self.memory[w].chunks[k].tier is Tier.DEVICE
                 }
+                fetch = d2d_sources(w, keys) if d2d_on else {}
+                tiers_before = (
+                    {k: self.memory[w].chunks[k].tier
+                     for k in dict.fromkeys(keys)}
+                    if mcast_on else {}
+                )
+                mcast_wait = now
+                if d2d_on and mcast_marks[w]:
+                    for k in dict.fromkeys(keys):
+                        if k in mcast_marks[w]:
+                            mcast_wait = max(mcast_wait,
+                                             mcast_marks[w].pop(k))
                 try:
+                    d2d_room: dict[tuple[str, int], float] = {}
+                    for k in sorted(fetch):
+                        room = self.memory[w].receive_d2d(k)
+                        if room is None:
+                            del fetch[k]  # raced to DEVICE meanwhile
+                        else:
+                            d2d_room[k] = room
                     stage_cost = self.memory[w].stage(keys)
                 except OutOfMemory:
                     sim_c["oom_events"].inc()
@@ -599,6 +793,31 @@ class Simulator:
                 staged_bytes[w] += footprint
                 inflight_on[tid] = w
                 h2d_key = (w, "h2d")
+                # Issue the peer-to-peer transfers on this worker's d2d
+                # stream; any spill cost from making room is folded into
+                # the first hop of the corresponding transfer.
+                d2d_end = now
+                if fetch:
+                    d2d_key = (w, "d2d")
+                    for k in sorted(fetch):
+                        src = fetch[k]
+                        size = self.memory[w].chunks[k].size
+                        dur = (d2d_room.get(k, 0.0)
+                               + topo.transfer_time(size, src, w))
+                        start = max(now, res_free.get(d2d_key, 0.0))
+                        res_free[d2d_key] = start + dur
+                        busy["d2d"] = busy.get("d2d", 0.0) + dur
+                        d2d_bytes_c.inc(size)
+                        d2d_transfers_c.inc()
+                        if trace_on:
+                            tracer.complete(
+                                f"d2d:{k[0]}", start, dur, worker=w,
+                                stream="d2d", cat="transfer",
+                                args={"tid": tid, "src": src,
+                                      "bytes": size},
+                            )
+                    d2d_end = res_free[d2d_key]
+                extra_wait = max(d2d_end, mcast_wait)
                 if pf_on:
                     # Consume prefetch marks: the task may not run before
                     # its prefetched transfers land, but it does not pay
@@ -627,12 +846,15 @@ class Simulator:
                                 cat="transfer",
                                 args={"tid": tid, "bytes": footprint},
                             )
-                        push(max(start + stage_cost, wait_until),
-                             "staged", tid)
+                        push(max(start + stage_cost, wait_until,
+                                 extra_wait), "staged", tid)
+                        if mcast_on:
+                            maybe_multicast(w, keys, tiers_before, fetch,
+                                            start + stage_cost)
                     else:
                         # Fast path: everything already resident — no need
                         # to queue behind unrelated h2d traffic.
-                        push(max(now, wait_until), "staged", tid)
+                        push(max(now, wait_until, extra_wait), "staged", tid)
                     maybe_prefetch(w)
                 else:
                     start = max(now, res_free.get(h2d_key, 0.0))
@@ -645,7 +867,10 @@ class Simulator:
                             cat="transfer",
                             args={"tid": tid, "bytes": footprint},
                         )
-                    push(start + stage_cost, "staged", tid)
+                    push(max(start + stage_cost, extra_wait), "staged", tid)
+                    if mcast_on and stage_cost > 0.0:
+                        maybe_multicast(w, keys, tiers_before, fetch,
+                                        start + stage_cost)
 
             elif kind == "staged":
                 resource = _EXECUTOR_FOR[t.kind]
@@ -761,6 +986,9 @@ class Simulator:
         stats = {k: delta.get(f"sim.{k}", 0.0) for k in _SIM_STAT_KEYS}
         for k in MEM_STAT_KEYS:
             stats[k] = delta.get(f"mem.{k}", 0.0)
+        stats["d2d_bytes"] = delta.get("d2d.bytes", 0.0)
+        stats["d2d_transfers"] = delta.get("d2d.transfers", 0.0)
+        stats["multicast_fanout"] = delta.get("multicast.fanout", 0.0)
         return SimResult(
             makespan=now, busy=busy, task_count=len(tasks), stats=stats,
             num_workers=self.num_workers,

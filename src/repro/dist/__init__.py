@@ -39,6 +39,7 @@ from repro.dist.collectives import (
     hierarchical_grad_allreduce,
     ring_allgather_matmul,
     ring_allreduce,
+    set_tracer,
 )
 from repro.dist.fault import (
     FaultEvent,
@@ -58,6 +59,7 @@ __all__ = [
     "hierarchical_grad_allreduce",
     "ring_allgather_matmul",
     "ring_allreduce",
+    "set_tracer",
     "FaultEvent",
     "HeartbeatMonitor",
     "HostState",

@@ -23,11 +23,36 @@ host-device meshes of the test harness.
 
 from __future__ import annotations
 
+import math
 from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
 from jax import lax
+
+from repro.obs.trace import NULL_TRACER
+
+# Module-level tracer hook: ``set_tracer(tracer)`` makes every collective
+# emit a ``dist``-stream span through the same machinery the simulator and
+# serve engine use, so dist traffic lands on the same Perfetto timeline.
+# Spans are recorded when the collective is *traced/launched* by JAX (under
+# ``jit`` that is trace time, not device execution time) — they mark which
+# collectives a step issues and their payload sizes, not device-side
+# duration.  The default NULL_TRACER keeps this zero-cost.
+_TRACER = NULL_TRACER
+
+
+def set_tracer(tracer) -> object:
+    """Install a :class:`repro.obs.trace.Tracer` for collective spans;
+    returns the previous tracer so callers can restore it."""
+    global _TRACER
+    prev = _TRACER
+    _TRACER = tracer if tracer is not None else NULL_TRACER
+    return prev
+
+
+def _span(name: str, **args):
+    return _TRACER.span(name, worker=0, stream="dist", cat="dist", **args)
 
 
 def _axis_size(axis_name: str) -> int:
@@ -42,11 +67,13 @@ def ring_allreduce(x: jax.Array, axis_name: str) -> jax.Array:
     the leading dim divides the ring size, otherwise falls back to the
     rotate-and-accumulate ring (n-1 hops of the full tensor)."""
     n = _axis_size(axis_name)
-    if n == 1:
-        return x
-    if x.ndim >= 1 and x.shape[0] % n == 0:
-        return _ring_allreduce_two_phase(x, axis_name, n)
-    return _ring_allreduce_rotate(x, axis_name, n)
+    with _span("collective:ring_allreduce", axis=axis_name, n=n,
+               size=int(math.prod(x.shape))):
+        if n == 1:
+            return x
+        if x.ndim >= 1 and x.shape[0] % n == 0:
+            return _ring_allreduce_two_phase(x, axis_name, n)
+        return _ring_allreduce_rotate(x, axis_name, n)
 
 
 def _ring_perm(n: int) -> list[tuple[int, int]]:
@@ -105,8 +132,10 @@ def ring_allgather_matmul(
     shard ``w[kᵢ, :]``, so the local dot is a full-shape partial product
     and the ring combines the ``n`` partials into the replicated result
     ``x @ w`` on every device."""
-    partial = jnp.matmul(x, w, precision=precision)
-    return ring_allreduce(partial, axis_name)
+    with _span("collective:ring_allgather_matmul", axis=axis_name,
+               m=int(x.shape[0]), k=int(x.shape[-1]), n=int(w.shape[-1])):
+        partial = jnp.matmul(x, w, precision=precision)
+        return ring_allreduce(partial, axis_name)
 
 
 def hierarchical_grad_allreduce(
@@ -130,4 +159,8 @@ def hierarchical_grad_allreduce(
             v = lax.psum(v, inter)
         return v
 
-    return jax.tree.map(reduce_leaf, grads)
+    leaves = jax.tree.leaves(grads)
+    with _span("collective:hierarchical_grad_allreduce",
+               intra=",".join(intra), inter=",".join(inter),
+               leaves=len(leaves)):
+        return jax.tree.map(reduce_leaf, grads)

@@ -67,6 +67,12 @@ class DeviceOverlap:
     wall: float  # global trace wall clock (shared by all devices)
     busy: dict[str, float]  # group ("compute"/"transfer"/"sched") → union-busy
     overlap: float  # compute ∩ (transfer ∪ sched)
+    # Transfer union-busy seconds split per executor stream (h2d / d2d /
+    # copy / net) — shows how much of the movement rode the peer-to-peer
+    # fabric vs the host link.  Empty when the trace carries no stream
+    # information (exported Chrome dicts map streams to numeric tids).
+    transfer_streams: dict[str, float] = dataclasses.field(
+        default_factory=dict)
 
     @property
     def overlap_fraction(self) -> float:
@@ -85,6 +91,7 @@ class DeviceOverlap:
             "busy_s": dict(self.busy), "overlap_s": self.overlap,
             "overlap_fraction": self.overlap_fraction,
             "exposed_transfer_s": self.exposed_transfer,
+            "transfer_streams_s": dict(self.transfer_streams),
         }
 
 
@@ -128,20 +135,25 @@ class OverlapReport:
         return "\n".join(lines)
 
 
-def _spans_of(trace) -> list[tuple[float, float, int, str]]:
-    """Normalize input → [(start_s, end_s, worker, cat)] for span events.
+def _spans_of(trace) -> list[tuple[float, float, int, str, str]]:
+    """Normalize input → [(start_s, end_s, worker, cat, stream)] for span
+    events.
 
     Accepts a live :class:`Tracer` (seconds) or an exported Chrome trace
-    dict / event list (microseconds)."""
+    dict / event list (microseconds).  Exported traces carry streams as
+    numeric tids, so stream names are only available from a live tracer —
+    Chrome-dict spans get ``stream=""`` and the per-stream transfer
+    breakdown stays empty."""
     if isinstance(trace, Tracer):
         return [
-            (e["ts"], e["ts"] + e["dur"], e["pid"], e["cat"])
+            (e["ts"], e["ts"] + e["dur"], e["pid"], e["cat"],
+             str(e.get("stream", "")))
             for e in trace.events if e["ph"] == "X"
         ]
     events = trace.get("traceEvents", []) if isinstance(trace, dict) else trace
     return [
         (e["ts"] / 1e6, (e["ts"] + e.get("dur", 0.0)) / 1e6,
-         int(e.get("pid", 0)), e.get("cat", ""))
+         int(e.get("pid", 0)), e.get("cat", ""), "")
         for e in events if e.get("ph") == "X"
     ]
 
@@ -151,18 +163,21 @@ def analyze(trace) -> OverlapReport:
     spans = _spans_of(trace)
     if not spans:
         return OverlapReport(wall=0.0, devices=[])
-    t0 = min(s for s, _e, _w, _c in spans)
-    t1 = max(e for _s, e, _w, _c in spans)
+    t0 = min(s[0] for s in spans)
+    t1 = max(s[1] for s in spans)
     wall = max(t1 - t0, 0.0)
 
     groups = {"compute": COMPUTE_CATS, "transfer": TRANSFER_CATS,
               "sched": SCHED_CATS}
     per_dev: dict[int, dict[str, list[tuple[float, float]]]] = {}
-    for s, e, w, cat in spans:
+    per_stream: dict[int, dict[str, list[tuple[float, float]]]] = {}
+    for s, e, w, cat, stream in spans:
         group = next((g for g, cats in groups.items() if cat in cats), None)
         if group is None:
             continue
         per_dev.setdefault(w, {g: [] for g in groups})[group].append((s, e))
+        if group == "transfer" and stream:
+            per_stream.setdefault(w, {}).setdefault(stream, []).append((s, e))
 
     devices = []
     for w in sorted(per_dev):
@@ -173,6 +188,10 @@ def analyze(trace) -> OverlapReport:
             worker=w, wall=wall,
             busy={g: _total(u) for g, u in unions.items()},
             overlap=overlap,
+            transfer_streams={
+                st: _total(_union(iv))
+                for st, iv in sorted(per_stream.get(w, {}).items())
+            },
         ))
     return OverlapReport(wall=wall, devices=devices)
 

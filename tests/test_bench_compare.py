@@ -1,0 +1,145 @@
+"""``benchmarks.compare_bench`` schema tolerance and d2d gates (ISSUE 10
+satellites S2/S6): the validator must tolerate *added* metric keys (the
+document schema grows additively) while still failing on missing required
+fields, and the perf-smoke invariants must gate the d2d fabric's
+host-byte and makespan claims."""
+
+from __future__ import annotations
+
+import copy
+
+from benchmarks.compare_bench import check_invariants, compare, validate
+
+
+def minimal_doc() -> dict:
+    """A hand-rolled document satisfying every required field and every
+    invariant."""
+    return {
+        "schema": "repro.bench_sim/1",
+        "config": {"full": False},
+        "fig10": [
+            {
+                "chunk_bytes": 1 << 20,
+                "baseline": {"makespan_s": 1.0, "overlap_fraction": 0.1},
+                "prefetch": {"makespan_s": 0.8, "overlap_fraction": 0.3},
+            },
+        ],
+        "eviction": {
+            "lru": {"makespan_s": 1.0, "h2d_bytes": 100.0},
+            "belady": {"makespan_s": 1.0, "h2d_bytes": 50.0},
+        },
+        "plan_cache": {"hits": 38.0, "misses": 2.0, "hit_rate": 0.95},
+        "recovery": {"worker_deaths": 1.0, "lineage_replays": 2.0,
+                     "makespan_s": 1.0},
+        "d2d": {
+            "host_only": {"makespan_s": 2.0, "h2d_bytes": 400.0},
+            "d2d": {"makespan_s": 1.8, "h2d_bytes": 300.0,
+                    "d2d_bytes": 100.0, "d2d_transfers": 12.0},
+            "placement": {"owner_comm_bytes": 64.0,
+                          "locality_comm_bytes": 0.0,
+                          "affinity_hits": 4.0},
+        },
+    }
+
+
+class TestValidateTolerance:
+    def test_minimal_doc_valid(self):
+        assert validate(minimal_doc()) == []
+        assert check_invariants(minimal_doc()) == []
+
+    def test_added_keys_are_tolerated(self):
+        """S2: a newer bench_sim may emit extra metrics anywhere — the
+        validator must not fail on keys it doesn't know."""
+        doc = minimal_doc()
+        doc["brand_new_section"] = {"anything": 1}
+        doc["fig10"][0]["prefetch"]["new_metric"] = 42.0
+        doc["eviction"]["lru"]["spill_bytes"] = 7.0
+        doc["d2d"]["d2d"]["multicast_fanout"] = 12.0
+        doc["recovery"]["new_counter"] = 0.0
+        assert validate(doc) == []
+
+    def test_missing_required_field_fails(self):
+        doc = minimal_doc()
+        del doc["eviction"]["lru"]["h2d_bytes"]
+        errs = validate(doc)
+        assert any("eviction.lru.h2d_bytes" in e for e in errs)
+
+    def test_missing_section_fails(self):
+        doc = minimal_doc()
+        del doc["recovery"]
+        errs = validate(doc)
+        assert any("recovery" in e for e in errs)
+
+    def test_d2d_section_is_optional_for_old_baselines(self):
+        """A baseline checked in before the d2d fabric existed must still
+        validate; the invariant layer (run on fresh documents) is what
+        requires the section."""
+        doc = minimal_doc()
+        del doc["d2d"]
+        assert validate(doc) == []
+        errs = check_invariants(doc)
+        assert any("d2d" in e for e in errs)
+
+    def test_d2d_missing_inner_field_fails(self):
+        doc = minimal_doc()
+        del doc["d2d"]["placement"]["affinity_hits"]
+        errs = validate(doc)
+        assert any("d2d.placement.affinity_hits" in e for e in errs)
+
+
+class TestD2dInvariants:
+    def test_fabric_must_cut_host_bytes(self):
+        doc = minimal_doc()
+        doc["d2d"]["d2d"]["h2d_bytes"] = doc["d2d"]["host_only"]["h2d_bytes"]
+        errs = check_invariants(doc)
+        assert any("not strictly below" in e for e in errs)
+
+    def test_fabric_must_not_hurt_makespan(self):
+        doc = minimal_doc()
+        doc["d2d"]["d2d"]["makespan_s"] = 2.5
+        errs = check_invariants(doc)
+        assert any("makespan" in e for e in errs)
+
+    def test_locality_must_not_plan_more_comm(self):
+        doc = minimal_doc()
+        doc["d2d"]["placement"]["locality_comm_bytes"] = 128.0
+        errs = check_invariants(doc)
+        assert any("placement" in e for e in errs)
+
+
+class TestCompareRegression:
+    def test_identical_docs_pass(self):
+        assert compare(minimal_doc(), minimal_doc()) == []
+
+    def test_old_without_d2d_section_passes(self):
+        """Additive schema growth is not a regression: an old baseline
+        predating the d2d section compares cleanly against a new document
+        that has one."""
+        old = minimal_doc()
+        del old["d2d"]
+        assert compare(old, minimal_doc()) == []
+
+    def test_d2d_host_byte_regression_flagged(self):
+        new = minimal_doc()
+        new["d2d"]["d2d"]["h2d_bytes"] += 1.0
+        errs = compare(minimal_doc(), new)
+        assert any("host-staged bytes regressed" in e for e in errs)
+
+    def test_d2d_makespan_regression_flagged(self):
+        new = minimal_doc()
+        new["d2d"]["d2d"]["makespan_s"] *= 1.5  # > 20% tolerance
+        errs = compare(minimal_doc(), new)
+        assert any("makespan regressed" in e for e in errs)
+
+    def test_checked_in_baseline_is_self_consistent(self):
+        """The committed BENCH_sim.json passes its own schema + invariants
+        and compares cleanly against itself."""
+        import json
+        import pathlib
+
+        path = (pathlib.Path(__file__).resolve().parent.parent
+                / "benchmarks" / "BENCH_sim.json")
+        doc = json.loads(path.read_text())
+        assert validate(doc) == []
+        assert check_invariants(doc) == []
+        assert compare(doc, copy.deepcopy(doc)) == []

@@ -1,0 +1,456 @@
+"""Peer-to-peer d2d transfer fabric (ISSUE 10): topology-aware routing,
+multicast staging, locality-aware placement, and the satellites that ride
+along.
+
+Acceptance claims pinned here:
+
+* on a multi-worker shared-input plan the d2d path moves strictly fewer
+  host-staged (h2d) bytes than host-only staging at equal-or-better
+  makespan;
+* with ``topology=None`` (the default) the schedule — and its trace
+  export — is byte-identical to the host-only scheduler's;
+* multicast turns one host staging + chained d2d hops into the fan-out k
+  consumers would otherwise each pay;
+* eviction prefers peer-replicated chunks (cheap victims) and the Belady
+  oracle's unknown-key / LRU-tie-break behaviour is exactly as documented;
+* the prefetcher skips producer-blocked tasks without burning window
+  slots (``prefetch_skipped``) and prefers the d2d path;
+* ``Planner(placement="locality")`` re-homes misaligned superblocks onto
+  the worker holding their input (counted, cached, comm-bytes-reducing)
+  while the default stays untouched.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import pytest
+
+from repro.core import (
+    ArrayMeta,
+    BlockWork,
+    FaultInjector,
+    HardwareModel,
+    Interconnect,
+    MemoryManager,
+    Planner,
+    RecoveryPolicy,
+    RowDist,
+    Simulator,
+    Tier,
+    Topology,
+    kill_worker,
+    parse,
+)
+from repro.core.plan_ir import ChunkRef, ExecutionPlan, TaskKind
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.overlap import analyze
+from repro.obs.trace import Tracer
+
+MB = 1 << 20
+
+
+def topo2() -> Interconnect:
+    """2 workers per node: workers {0,1} and {2,3} are node-local."""
+    return Interconnect(workers_per_node=2)
+
+
+def hw_with_topology() -> HardwareModel:
+    return dataclasses.replace(HardwareModel.paper_p100(), topology=topo2())
+
+
+def shared_input_plan(num_workers: int = 4, num_blocks: int = 4,
+                      nbytes: int = MB, flops: int = 10 ** 9
+                      ) -> ExecutionPlan:
+    """Every worker reads the same ``num_blocks`` table chunks; worker j
+    first runs j+1 private warm-ups so workers hit the shared reads at
+    staggered times (first reader host-stages, the rest can ride d2d)."""
+    plan = ExecutionPlan(launch_name="shared_table")
+    for w in range(num_workers):
+        prev: list[int] = []
+        for i in range(w + 1):
+            t = plan.add(TaskKind.EXECUTE, w, deps=prev,
+                         reads=[ChunkRef("priv", w * 16 + i)],
+                         bytes=nbytes, flops=flops, label=f"warm{w}.{i}")
+            prev = [t.tid]
+        for b in range(num_blocks):
+            t = plan.add(TaskKind.EXECUTE, w, deps=prev,
+                         reads=[ChunkRef("table", b),
+                                ChunkRef("priv", w * 16 + 8 + b)],
+                         bytes=nbytes, flops=flops, label=f"use{w}.{b}")
+            prev = [t.tid]
+    return plan
+
+
+def run(plan, hw=None, workers: int = 4, **kw):
+    sim = Simulator(hw or HardwareModel.paper_p100(), workers,
+                    flops_per_thread=1.0, **kw)
+    return sim.run(plan)
+
+
+# ---------------------------------------------------------------------------
+# Interconnect model
+# ---------------------------------------------------------------------------
+
+
+class TestInterconnect:
+    def test_node_grouping_and_links(self):
+        ic = topo2()
+        assert ic.node(0) == ic.node(1) == 0
+        assert ic.node(2) == ic.node(3) == 1
+        assert ic.same_node(0, 1) and not ic.same_node(1, 2)
+        assert ic.link(0, 1) == (ic.same_node_bw, ic.same_node_latency)
+        assert ic.link(0, 2) == (ic.cross_node_bw, ic.cross_node_latency)
+
+    def test_same_node_transfer_is_cheaper(self):
+        ic = topo2()
+        assert ic.transfer_time(MB, 0, 1) < ic.transfer_time(MB, 0, 2)
+        # latency + bytes/bw, exactly
+        assert ic.transfer_time(MB, 0, 1) == pytest.approx(
+            ic.same_node_latency + MB / ic.same_node_bw)
+
+    def test_cheapest_source_prefers_same_node_then_lowest_id(self):
+        ic = topo2()
+        assert ic.cheapest_source(3, [0, 1, 2]) == 2  # only same-node peer
+        assert ic.cheapest_source(3, [0, 1]) == 0     # tie -> lowest id
+        assert ic.cheapest_source(0, [1, 2, 3]) == 1
+
+    def test_paper_cluster_preset(self):
+        ic = Interconnect.paper_cluster()
+        assert ic.workers_per_node == 4  # 4 nodes x 4 P100s
+        assert ic.same_node_bw > ic.cross_node_bw
+        hw = HardwareModel.paper_cluster()
+        assert hw.topology == ic
+        # the rest of the model is the paper P100 platform
+        assert dataclasses.replace(hw, topology=None) == \
+            HardwareModel.paper_p100()
+
+    def test_default_hardware_has_no_topology(self):
+        assert HardwareModel().topology is None
+        assert HardwareModel.paper_p100().topology is None
+
+
+# ---------------------------------------------------------------------------
+# d2d demand staging + multicast
+# ---------------------------------------------------------------------------
+
+
+class TestD2dStaging:
+    def test_fewer_host_bytes_at_better_or_equal_makespan(self):
+        """ISSUE 10 acceptance: the fabric moves strictly fewer h2d bytes
+        than host-only staging at equal-or-better makespan."""
+        host = run(shared_input_plan())
+        fab = run(shared_input_plan(), hw=hw_with_topology())
+        assert fab.stats["h2d_bytes"] < host.stats["h2d_bytes"]
+        assert fab.makespan <= host.makespan
+        assert fab.stats["d2d_bytes"] > 0
+        assert fab.stats["d2d_transfers"] >= 1
+        # moved bytes are conserved: what left the host path arrived p2p
+        assert fab.stats["d2d_in_bytes"] > 0
+
+    def test_d2d_stats_zero_without_topology(self):
+        res = run(shared_input_plan())
+        for k in ("d2d_bytes", "d2d_transfers", "multicast_fanout"):
+            assert res.stats.get(k, None) == 0
+        assert res.stats["d2d_in_bytes"] == 0
+
+    def test_multicast_chains_shared_chunks(self):
+        res = run(shared_input_plan(), hw=hw_with_topology())
+        # 4 table blocks x 3 non-staging consumers each
+        assert res.stats["multicast_fanout"] > 0
+
+    def test_multicast_off_still_serves_demand_d2d(self):
+        res = run(shared_input_plan(), hw=hw_with_topology(),
+                  multicast=False)
+        assert res.stats["multicast_fanout"] == 0
+        assert res.stats["d2d_transfers"] >= 1
+        host = run(shared_input_plan())
+        assert res.stats["h2d_bytes"] < host.stats["h2d_bytes"]
+
+    def test_d2d_spans_on_d2d_stream(self):
+        tr = Tracer()
+        run(shared_input_plan(), hw=hw_with_topology(), tracer=tr)
+        d2d_spans = [e for e in tr.events
+                     if e["ph"] == "X" and e.get("stream") == "d2d"]
+        assert d2d_spans
+        assert all(e["cat"] == "transfer" for e in d2d_spans)
+        names = {e["name"].split(":")[0] for e in d2d_spans}
+        assert names <= {"d2d", "multicast", "prefetch"}
+
+    def test_overlap_analyzer_reports_transfer_streams(self):
+        tr = Tracer()
+        run(shared_input_plan(), hw=hw_with_topology(), tracer=tr)
+        rep = analyze(tr)
+        streams = set()
+        for d in rep.devices:
+            streams |= set(d.transfer_streams)
+            # per-stream split never exceeds the union transfer busy time
+            assert sum(d.transfer_streams.values()) >= \
+                d.busy.get("transfer", 0.0) - 1e-12
+        assert "d2d" in streams and "h2d" in streams
+
+
+class TestNoTopologyByteIdentical:
+    def test_trace_identical_with_and_without_fabric_code(self):
+        """With no topology the d2d fabric is inert: traces from a default
+        run and a multicast=False run are byte-identical, and no d2d spans
+        exist."""
+        tr_a, tr_b = Tracer(), Tracer()
+        run(shared_input_plan(), tracer=tr_a)
+        run(shared_input_plan(), tracer=tr_b, multicast=False)
+        assert tr_a.to_json() == tr_b.to_json()
+        assert not any(e.get("stream") == "d2d" for e in tr_a.events)
+
+    def test_prefetch_on_no_topology_trace_unchanged_by_multicast_flag(self):
+        tr_a, tr_b = Tracer(), Tracer()
+        run(shared_input_plan(), tracer=tr_a, prefetch_window=4)
+        run(shared_input_plan(), tracer=tr_b, prefetch_window=4,
+            multicast=False)
+        assert tr_a.to_json() == tr_b.to_json()
+
+
+# ---------------------------------------------------------------------------
+# Prefetcher: d2d preference + skip-and-continue (S1)
+# ---------------------------------------------------------------------------
+
+
+class TestPrefetchD2d:
+    def test_prefetch_rides_d2d_stream(self):
+        """With multicast off, lookahead pulls peer-resident chunks over
+        the d2d stream (visible as prefetch spans on stream 'd2d')."""
+        tr = Tracer()
+        res = run(shared_input_plan(), hw=hw_with_topology(), tracer=tr,
+                  prefetch_window=8, multicast=False)
+        assert res.stats["prefetch_issued"] > 0
+        pf_d2d = [e for e in tr.events
+                  if e["ph"] == "X" and e["name"].startswith("prefetch:")
+                  and e.get("stream") == "d2d"]
+        assert pf_d2d
+        assert all("src" in e["args"] for e in pf_d2d)
+        assert res.stats["d2d_transfers"] >= len(pf_d2d)
+
+    def test_skip_and_continue_across_producer_blocked_tasks(self):
+        """S1: tasks whose every missing chunk awaits its producer do not
+        burn window slots — the scan skips them (counted) and prefetches
+        later runnable work across the boundary."""
+        plan = ExecutionPlan(launch_name="blocked_chain")
+        # producer lives on worker 1, so worker 0's lookahead cannot
+        # satisfy the consumers' input by prefetching it itself
+        t0 = plan.add(TaskKind.EXECUTE, 1, writes=[ChunkRef("p", 0)],
+                      bytes=MB, flops=10 ** 9, label="producer")
+        for i in range(4):  # window-filling consumers of the pending chunk
+            plan.add(TaskKind.EXECUTE, 0, deps=[t0.tid],
+                     reads=[ChunkRef("p", 0)],
+                     bytes=MB, flops=10 ** 9, label=f"consumer{i}")
+        for j in range(4):  # later tasks whose inputs already exist
+            plan.add(TaskKind.EXECUTE, 0, deps=[t0.tid],
+                     reads=[ChunkRef("in", j)],
+                     bytes=MB, flops=10 ** 9, label=f"tail{j}")
+        res = run(plan, workers=2, prefetch_window=2)
+        assert res.stats["prefetch_skipped"] > 0
+        assert res.stats["prefetch_issued"] > 0
+
+    def test_skipped_counter_zero_when_nothing_blocked(self):
+        plan = ExecutionPlan(launch_name="flat")
+        for j in range(6):
+            plan.add(TaskKind.EXECUTE, 0, reads=[ChunkRef("in", j)],
+                     bytes=MB, flops=10 ** 9, label=f"t{j}")
+        res = run(plan, workers=1, prefetch_window=3)
+        assert res.stats["prefetch_skipped"] == 0
+        assert res.stats["prefetch_issued"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Eviction: peer-replicated cheap victims + Belady fallback (S4)
+# ---------------------------------------------------------------------------
+
+
+def small_manager(capacity: float = 3.0 * MB) -> MemoryManager:
+    hw = dataclasses.replace(HardwareModel.paper_p100(),
+                             device_capacity=capacity)
+    return MemoryManager(hw, registry=MetricsRegistry())
+
+
+class TestPeerEviction:
+    def test_peer_replicated_chunk_is_preferred_victim(self):
+        mm = small_manager()
+        for i in range(3):
+            mm.register(("a", i), MB)
+        mm.stage([("a", 0), ("a", 1), ("a", 2)])
+        mm.unstage([("a", 0), ("a", 1), ("a", 2)])
+        # LRU order is a0 < a1 < a2, but only a1 has a peer replica
+        mm.peer_resident = lambda k: k == ("a", 1)
+        mm.register(("b", 0), MB)
+        mm.stage([("b", 0)])  # needs 1 MB: must evict exactly one chunk
+        assert mm.chunks[("a", 1)].tier is not Tier.DEVICE
+        assert mm.chunks[("a", 0)].tier is Tier.DEVICE
+        assert mm.stats["peer_evictions"] == 1
+
+    def test_without_predicate_plain_lru(self):
+        mm = small_manager()
+        for i in range(3):
+            mm.register(("a", i), MB)
+        mm.stage([("a", 0), ("a", 1), ("a", 2)])
+        mm.unstage([("a", 0), ("a", 1), ("a", 2)])
+        mm.register(("b", 0), MB)
+        mm.stage([("b", 0)])
+        assert mm.chunks[("a", 0)].tier is not Tier.DEVICE  # LRU front
+        assert mm.stats["peer_evictions"] == 0
+
+    def test_sim_counts_peer_evictions_under_pressure(self):
+        hw = dataclasses.replace(hw_with_topology(),
+                                 device_capacity=3.0 * MB,
+                                 staging_throttle=2.5 * MB)
+        res = run(shared_input_plan(), hw=hw)
+        assert res.stats["evictions"] > 0
+        assert res.stats["peer_evictions"] > 0
+
+
+class TestBeladyFallback:
+    def test_unknown_key_is_preferred_victim(self):
+        """A chunk the oracle doesn't know maps to 'no next use' and is
+        evicted before chunks with a known future use (documented in
+        docs/scheduling.md)."""
+        mm = small_manager()
+        for i in range(3):
+            mm.register(("a", i), MB)
+        mm.stage([("a", 0), ("a", 1), ("a", 2)])
+        mm.unstage([("a", 0), ("a", 1), ("a", 2)])
+        known = {("a", 0): 5.0, ("a", 2): 9.0}  # a1 unknown -> None
+        mm.eviction_oracle = known.get
+        mm.register(("b", 0), MB)
+        mm.stage([("b", 0)])
+        assert mm.chunks[("a", 1)].tier is not Tier.DEVICE
+        assert mm.chunks[("a", 0)].tier is Tier.DEVICE
+        assert mm.chunks[("a", 2)].tier is Tier.DEVICE
+        assert mm.stats["oracle_evictions"] == 1
+
+    def test_tie_breaks_toward_lru(self):
+        mm = small_manager()
+        for i in range(3):
+            mm.register(("a", i), MB)
+        mm.stage([("a", 0), ("a", 1), ("a", 2)])
+        mm.unstage([("a", 0), ("a", 1), ("a", 2)])
+        mm.touch(("a", 0))  # now a1 is least recently used
+        mm.eviction_oracle = lambda k: 7.0  # all equally distant
+        mm.register(("b", 0), MB)
+        mm.stage([("b", 0)])
+        assert mm.chunks[("a", 1)].tier is not Tier.DEVICE
+        assert mm.chunks[("a", 0)].tier is Tier.DEVICE
+
+    def test_belady_survives_worker_death_with_d2d(self):
+        """Worker death reshuffles chunk homes (re-registered keys the
+        oracle may not know); the unknown->evict-first fallback plus d2d
+        replica re-fetch must still complete every task."""
+        hw = dataclasses.replace(hw_with_topology(),
+                                 device_capacity=6.0 * MB,
+                                 staging_throttle=4.0 * MB)
+        inj = FaultInjector([kill_worker(worker=3, after=2)], seed=7)
+        res = run(shared_input_plan(), hw=hw, fault_injector=inj,
+                  recovery=RecoveryPolicy(max_attempts=8), seed=7,
+                  eviction="belady")
+        assert res.stats["worker_deaths"] == 1
+        assert res.task_count == len(shared_input_plan().tasks)
+        assert res.stats["d2d_transfers"] >= 1
+
+
+class TestWorkerDeath:
+    def test_dead_worker_never_sources_d2d_after_death(self):
+        tr = Tracer()
+        inj = FaultInjector([kill_worker(worker=3, after=2)], seed=7)
+        res = run(shared_input_plan(), hw=hw_with_topology(), tracer=tr,
+                  fault_injector=inj, recovery=RecoveryPolicy(max_attempts=8),
+                  seed=7)
+        assert res.stats["worker_deaths"] == 1
+        death_ts = [e["ts"] for e in tr.events
+                    if e["name"] == "worker_death"]
+        assert death_ts
+        for e in tr.events:
+            if (e["ph"] == "X" and e.get("stream") == "d2d"
+                    and e["ts"] >= death_ts[0]):
+                assert e["args"].get("src") != 3
+
+
+# ---------------------------------------------------------------------------
+# Locality-aware placement
+# ---------------------------------------------------------------------------
+
+
+AXPY_ANN = parse("global i => read inp[i], write out[i]")
+
+
+def quartered_arrays(n: int) -> dict[str, ArrayMeta]:
+    return {
+        "inp": ArrayMeta("inp", (n,), 4, RowDist(num_chunks=4)),
+        "out": ArrayMeta("out", (n,), 4, RowDist(num_chunks=4)),
+    }
+
+
+class TestLocalityPlacement:
+    N = 1 << 16
+
+    def _plan(self, placement: str, reg=None, planner=None):
+        planner = planner or Planner(Topology(4, devices_per_node=2),
+                                     registry=reg, placement=placement)
+        return planner.plan_launch("axpy", AXPY_ANN, (self.N,),
+                                   BlockWork(self.N // 8),
+                                   quartered_arrays(self.N))
+
+    def test_rehomes_misaligned_superblocks(self):
+        reg = MetricsRegistry()
+        lp = self._plan("locality", reg=reg)
+        hits = reg.snapshot().get("place.affinity_hits", 0.0)
+        assert hits > 0
+        # every EXECUTE now runs on the worker owning its input quarter:
+        # superblock i covers [i*n/8, (i+1)*n/8), whose data quarter is
+        # owned by worker i//2
+        owners = [t.worker for t in lp.plan.tasks
+                  if t.kind is TaskKind.EXECUTE]
+        assert owners == [i // 2 for i in range(8)]
+
+    def test_reduces_comm_bytes(self):
+        owner = self._plan("owner")
+        local = self._plan("locality")
+        assert local.total_comm_bytes() < owner.total_comm_bytes()
+        assert local.total_comm_bytes() == 0
+
+    def test_default_placement_unchanged(self):
+        reg = MetricsRegistry()
+        lp = self._plan("owner", reg=reg)
+        assert reg.snapshot().get("place.affinity_hits", 0.0) == 0
+        owners = [t.worker for t in lp.plan.tasks
+                  if t.kind is TaskKind.EXECUTE]
+        assert owners == [i % 4 for i in range(8)]  # round-robin intact
+
+    def test_aligned_layout_untouched_under_locality(self):
+        """When work and data align, the incumbent wins every tie and
+        locality placement is a no-op."""
+        reg = MetricsRegistry()
+        planner = Planner(Topology(4, devices_per_node=2), registry=reg,
+                          placement="locality")
+        planner.plan_launch("axpy", AXPY_ANN, (self.N,),
+                            BlockWork(self.N // 4),
+                            quartered_arrays(self.N))
+        assert reg.snapshot().get("place.affinity_hits", 0.0) == 0
+
+    def test_cached_replay_keeps_affinity(self):
+        reg = MetricsRegistry()
+        planner = Planner(Topology(4, devices_per_node=2), registry=reg,
+                          placement="locality")
+        first = self._plan("locality", planner=planner)
+        second = self._plan("locality", planner=planner)
+        assert reg.snapshot().get("plan.cache{result=hit}", 0.0) >= 1
+        owners = lambda lp: [t.worker for t in lp.plan.tasks
+                             if t.kind is TaskKind.EXECUTE]
+        assert owners(first) == owners(second)
+
+    def test_signature_distinguishes_placement_modes(self):
+        a = Planner(Topology(4, devices_per_node=2), placement="owner")
+        b = Planner(Topology(4, devices_per_node=2), placement="locality")
+        args = ("axpy", AXPY_ANN, (self.N,), BlockWork(self.N // 8),
+                quartered_arrays(self.N), None)
+        assert a._plan_signature(*args) != b._plan_signature(*args)
+
+    def test_unknown_placement_rejected(self):
+        with pytest.raises(ValueError):
+            Planner(Topology(4), placement="nearest")

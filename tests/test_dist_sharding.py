@@ -163,3 +163,62 @@ class TestConstrain:
         out = f(jnp.ones((4, 8)))
         assert out.shape == (4, 8)
         assert float(out[0, 0]) == 2.0
+
+
+class TestCollectiveSpans:
+    """S3 (ISSUE 10): collectives emit per-collective spans on a ``dist``
+    stream through the module tracer installed with ``set_tracer``."""
+
+    def test_ring_allreduce_emits_dist_span(self):
+        from jax.experimental.shard_map import shard_map
+        from repro.dist import ring_allreduce, set_tracer
+        from repro.obs.trace import Tracer
+
+        mesh = jax.make_mesh((1,), ("data",))
+        tracer = Tracer()
+        prev = set_tracer(tracer)
+        try:
+            f = shard_map(lambda x: ring_allreduce(x, "data"), mesh=mesh,
+                          in_specs=P("data"), out_specs=P("data"))
+            out = f(jnp.arange(8.0))
+        finally:
+            set_tracer(prev)
+        assert jnp.allclose(out, jnp.arange(8.0))  # n=1: identity
+        spans = [e for e in tracer.events
+                 if e["name"] == "collective:ring_allreduce"]
+        assert spans
+        e = spans[0]
+        assert e["stream"] == "dist" and e["cat"] == "dist"
+        assert e["args"]["axis"] == "data"
+        assert e["args"]["n"] == 1 and e["args"]["size"] == 8
+
+    def test_hierarchical_allreduce_span_and_default_null(self):
+        from repro.dist import hierarchical_grad_allreduce, set_tracer
+        from repro.dist import collectives
+        from repro.obs.trace import NULL_TRACER, Tracer
+
+        # default tracer is the no-op singleton
+        assert collectives._TRACER is NULL_TRACER
+        tracer = Tracer()
+        prev = set_tracer(tracer)
+        try:
+            grads = {"w": jnp.ones((2,)), "b": jnp.zeros((3,))}
+            out = hierarchical_grad_allreduce(grads, intra_axes=(),
+                                              inter_axes=())
+        finally:
+            restored = set_tracer(prev)
+        assert restored is tracer  # set_tracer returns the previous tracer
+        assert collectives._TRACER is NULL_TRACER
+        assert out["w"].shape == (2,)
+        spans = [e for e in tracer.events
+                 if e["name"] == "collective:hierarchical_grad_allreduce"]
+        assert spans and spans[0]["args"]["leaves"] == 2
+
+    def test_set_tracer_none_restores_null(self):
+        from repro.dist import set_tracer
+        from repro.dist import collectives
+        from repro.obs.trace import NULL_TRACER, Tracer
+
+        set_tracer(Tracer())
+        set_tracer(None)
+        assert collectives._TRACER is NULL_TRACER
